@@ -1,0 +1,105 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md §Dry-run and
+§Roofline tables (markdown)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_results(dry_dir: str = "results/dryrun") -> list[dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def _fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(results: list[dict], mesh: str) -> str:
+    lines = [
+        "| arch | shape | status | compile s | GiB/dev | fits 16GiB | "
+        "collectives (top) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r.get("mesh") not in (mesh, {"single": "16x16", "multi": "2x16x16"}[mesh]):
+            continue
+        if r["status"] == "ok":
+            mem = r["memory"]
+            coll = r["hlo"]["collective_breakdown"]
+            top = sorted(coll.items(), key=lambda kv: -kv[1])[:2]
+            tops = ", ".join(f"{k} {v/2**30:.1f}G" for k, v in top) or "none"
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ok | {r.get('compile_s','-')} | "
+                f"{mem['total_per_device_gib']} | "
+                f"{'Y' if mem['fits_v5e_16gib'] else 'N'} | {tops} |"
+            )
+        elif r["status"] == "skip":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | skip | - | - | - | "
+                f"{r['reason'][:60]} |"
+            )
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | - | - | - | "
+                f"{r.get('error','')[:60]} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(results: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "bound s | useful-FLOP ratio | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r.get("mesh") != {"single": "16x16", "multi": "2x16x16"}[mesh]:
+            continue
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        hint = _bottleneck_hint(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | {t['dominant']} | "
+            f"{t['bound_s']:.3g} | {t['model_flops_ratio']:.3f} | {hint} |"
+        )
+    return "\n".join(lines)
+
+
+def _bottleneck_hint(r: dict) -> str:
+    dom = r["roofline"]["dominant"]
+    kind = r.get("kind", "")
+    if dom == "collective":
+        coll = r["hlo"]["collective_breakdown"]
+        top = max(coll, key=coll.get) if coll else "?"
+        return f"cut {top} volume (resharding/layout or fused collectives)"
+    if dom == "memory":
+        if "serve" in kind:
+            return "shrink cache reads (windowed KV, quantized cache)"
+        return "fuse elementwise chains / smaller remat residuals"
+    return "increase arithmetic intensity (larger tiles, fewer reshards)"
+
+
+def main() -> None:
+    results = load_results()
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = len(results) - n_ok - n_skip
+    print(f"# Dry-run aggregate: {n_ok} ok / {n_skip} skip / {n_err} error\n")
+    for mesh in ("single", "multi"):
+        print(f"## Mesh {mesh}\n")
+        print(dryrun_table(results, mesh))
+        print()
+    print("## Roofline (single-pod)\n")
+    print(roofline_table(results, "single"))
+
+
+if __name__ == "__main__":
+    main()

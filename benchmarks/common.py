@@ -1,0 +1,60 @@
+"""Shared benchmark helpers: model training cache + timing."""
+
+from __future__ import annotations
+
+import os
+import time
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core.compile import compile_ensemble
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, RFParams, train_gbdt, train_rf
+from repro.data.tabular import make_dataset
+
+FAST = os.environ.get("BENCH_FAST", "1") != "0"
+
+
+def budget(full: int, fast: int) -> int:
+    return fast if FAST else full
+
+
+@lru_cache(maxsize=None)
+def trained_model(name: str, bits: str = "8bit", kind: str = "gbdt",
+                  rounds: int | None = None, leaves: int | None = None):
+    """(ensemble, quantizer, dataset, xb_test) for a Table-II dataset."""
+    ds = make_dataset(name)
+    n_bins = {"float": 4096, "8bit": 256, "4bit": 16}[bits]
+    q = FeatureQuantizer.fit(ds.x_train, n_bins)
+    xb_tr = q.transform(ds.x_train)
+    # the paper's iso-area rule: 4-bit gets 2x leaves (§V-A)
+    default_leaves = 128 if bits == "4bit" else 64
+    leaves = leaves or default_leaves
+    rounds = rounds or budget(60, 25)
+    if kind == "gbdt":
+        ens = train_gbdt(
+            xb_tr, ds.y_train, task=ds.task, n_bins=n_bins,
+            n_classes=ds.n_classes,
+            params=GBDTParams(n_rounds=rounds, max_leaves=leaves,
+                              learning_rate=0.15),
+        )
+    else:
+        ens = train_rf(
+            xb_tr, ds.y_train, task=ds.task, n_bins=n_bins,
+            n_classes=ds.n_classes,
+            params=RFParams(n_trees=rounds * 2, max_leaves=leaves, colsample=0.7),
+        )
+    return ens, q, ds, q.transform(ds.x_test)
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

@@ -1,0 +1,59 @@
+"""Fig. 10: latency/throughput — X-TIME chip model vs GPU model vs Booster
+model, plus a *measured* same-hardware comparison (CPU): CAM engine vs
+O(D) traversal baseline on identical trained models."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import budget, time_call, trained_model
+from repro.core.baselines import TraversalBaseline
+from repro.core.compile import compile_ensemble, pack_cores
+from repro.core.engine import XTimeEngine
+from repro.core.noc import plan_noc
+from repro.core.perfmodel import booster_perf, gpu_perf_model, xtime_perf
+
+DATASETS = ["churn", "eye", "telco", "rossmann"]
+
+
+def run() -> list[dict]:
+    rows = []
+    for name in DATASETS:
+        ens, q, ds, xb_te = trained_model(name, "8bit", "gbdt")
+        table = compile_ensemble(ens)
+        plc = pack_cores(table)
+        noc = plan_noc(table, plc)
+        depth = int(max(t.max_depth for t in ens.trees))
+
+        xt = xtime_perf(table, plc, noc)
+        gp = gpu_perf_model(n_trees=ens.n_trees, depth=depth)
+        bo = booster_perf(table, plc, noc, depth=depth)
+        rows.append({
+            "name": f"fig10/{name}/model",
+            "us_per_call": xt.latency_ns / 1e3,
+            "derived": (
+                f"xtime_lat_ns={xt.latency_ns:.0f};xtime_tput_msps={xt.throughput_msps:.0f};"
+                f"gpu_lat_ns={gp.latency_ns:.0f};gpu_tput_msps={gp.throughput_msps:.1f};"
+                f"booster_lat_ns={bo.latency_ns:.0f};booster_tput_msps={bo.throughput_msps:.0f};"
+                f"lat_speedup_vs_gpu={gp.latency_ns/xt.latency_ns:.0f}x;"
+                f"tput_speedup_vs_gpu={xt.throughput_msps/gp.throughput_msps:.0f}x;"
+                f"tput_vs_booster={xt.throughput_msps/bo.throughput_msps:.1f}x"
+            ),
+        })
+
+        # measured on THIS machine: one CAM match op vs O(D) gathers
+        b = budget(4096, 1024)
+        xb = np.tile(xb_te, (int(np.ceil(b / len(xb_te))), 1))[:b]
+        eng = XTimeEngine(table, backend="jnp")
+        trav = TraversalBaseline(ens)
+        t_eng = time_call(lambda a: eng.raw_margin(a).block_until_ready(), xb)
+        t_trav = time_call(lambda a: trav.raw_margin(a).block_until_ready(), xb)
+        rows.append({
+            "name": f"fig10/{name}/measured_cpu",
+            "us_per_call": t_eng,
+            "derived": (
+                f"engine_us={t_eng:.0f};traversal_us={t_trav:.0f};"
+                f"batch={b};engine_msps={b/t_eng:.3f};traversal_msps={b/t_trav:.3f}"
+            ),
+        })
+    return rows

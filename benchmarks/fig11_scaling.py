@@ -1,0 +1,68 @@
+"""Fig. 11: throughput scaling vs N_trees, D (GPU degrades linearly;
+X-TIME flat until the chip fills) and vs N_feat (X-TIME's pain point)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.compile import CAMTable, pack_cores
+from repro.core.noc import plan_noc
+from repro.core.perfmodel import gpu_perf_model, xtime_perf
+
+
+def _synthetic_table(n_trees: int, depth: int, n_feat: int) -> CAMTable:
+    """Random balanced ensemble (placement/perf only, no semantics)."""
+    leaves = 2 ** depth
+    r = n_trees * leaves
+    rng = np.random.default_rng(0)
+    low = np.zeros((r, n_feat), np.int32)
+    high = np.full((r, n_feat), 256, np.int32)
+    return CAMTable(
+        low=low, high=high,
+        leaf=rng.normal(size=(r,)).astype(np.float32),
+        tree_id=np.repeat(np.arange(n_trees), leaves).astype(np.int32),
+        class_id=np.zeros((r,), np.int32),
+        n_trees=n_trees, n_features=n_feat, n_bins=256, n_outputs=1,
+        task="binary", kind="gbdt", base_score=0.0, n_classes=2,
+    )
+
+
+def run() -> list[dict]:
+    rows = []
+    for n_trees in (64, 256, 1024, 4096):
+        t = _synthetic_table(n_trees, 8, 32)
+        plc = pack_cores(t)
+        xt = xtime_perf(t, plc, plan_noc(t, plc))
+        gp = gpu_perf_model(n_trees=n_trees, depth=8)
+        rows.append({
+            "name": f"fig11a/trees_{n_trees}",
+            "us_per_call": 0.0,
+            "derived": f"xtime_tput_msps={xt.throughput_msps:.0f};"
+                       f"gpu_tput_msps={gp.throughput_msps:.1f};"
+                       f"replication={plc.replication}",
+        })
+    for depth in (4, 6, 8):
+        t = _synthetic_table(256, depth, 32)
+        plc = pack_cores(t)
+        xt = xtime_perf(t, plc, plan_noc(t, plc))
+        gp = gpu_perf_model(n_trees=256, depth=depth)
+        rows.append({
+            "name": f"fig11a/depth_{depth}",
+            "us_per_call": 0.0,
+            "derived": f"xtime_tput_msps={xt.throughput_msps:.0f};"
+                       f"gpu_tput_msps={gp.throughput_msps:.1f}",
+        })
+    for n_feat in (16, 65, 130, 260):
+        t = _synthetic_table(256, 8, n_feat)
+        plc = pack_cores(t)
+        xt = xtime_perf(t, plc, plan_noc(t, plc))
+        gp = gpu_perf_model(n_trees=256, depth=8)
+        rows.append({
+            "name": f"fig11b/feat_{n_feat}",
+            "us_per_call": 0.0,
+            "derived": f"xtime_tput_msps={xt.throughput_msps:.0f};"
+                       f"xtime_lat_ns={xt.latency_ns:.0f};"
+                       f"gpu_tput_msps={gp.throughput_msps:.1f};"
+                       f"segments={plc.n_feature_segments};bottleneck={xt.bottleneck}",
+        })
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 8: chip area and peak-power breakdown (16 nm constants)."""
+
+from __future__ import annotations
+
+from repro.core.compile import ChipSpec
+from repro.core.perfmodel import PowerAreaSpec
+
+
+def run() -> list[dict]:
+    spec = ChipSpec()
+    pa = PowerAreaSpec()
+    acam_w = spec.n_cores * pa.acam_mw_per_core / 1e3
+    sram_w = spec.n_cores * pa.sram_logic_mw_per_core / 1e3
+    router_w = spec.n_routers * pa.router_mw / 1e3
+    total_w = pa.chip_power_w(spec)
+    acam_mm = spec.n_cores * pa.acam_mm2_per_core
+    sram_mm = spec.n_cores * pa.sram_logic_mm2_per_core
+    router_mm = spec.n_routers * pa.router_mm2
+    total_mm = pa.chip_area_mm2(spec)
+    return [
+        {
+            "name": "fig8/power_w",
+            "us_per_call": 0.0,
+            "derived": f"acam={acam_w:.2f};sram_logic={sram_w:.2f};"
+                       f"routers={router_w:.2f};cp={pa.cp_w:.2f};total={total_w:.2f};"
+                       f"paper_total=19.0",
+        },
+        {
+            "name": "fig8/area_mm2",
+            "us_per_call": 0.0,
+            "derived": f"acam={acam_mm:.1f};sram_logic={sram_mm:.1f};"
+                       f"routers={router_mm:.1f};cp={pa.cp_mm2:.1f};total={total_mm:.1f};"
+                       f"acam_fraction={acam_mm/total_mm:.2f}",
+        },
+    ]

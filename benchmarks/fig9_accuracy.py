@@ -1,0 +1,37 @@
+"""Fig. 9(a): accuracy under hardware constraints.
+
+Configurations per dataset: Unconstrained (4096-bin 'float'), X-TIME 8bit
+(256 bins), X-TIME 4bit (16 bins, 2x leaves — iso-area), Only-RF.
+Synthetic Table-II analogs (offline container), so the *deltas* are the
+reproduction target, not absolute accuracies.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import FAST, trained_model
+from repro.data.tabular import accuracy_metric
+
+DATASETS = ["churn", "eye", "gesture", "telco", "rossmann"] + (
+    [] if FAST else ["forest", "gas"]
+)
+
+
+def run() -> list[dict]:
+    rows = []
+    for name in DATASETS:
+        accs = {}
+        for label, bits, kind in (
+            ("unconstrained", "float", "gbdt"),
+            ("xtime_8bit", "8bit", "gbdt"),
+            ("xtime_4bit", "4bit", "gbdt"),
+            ("only_rf", "8bit", "rf"),
+        ):
+            ens, q, ds, xb_te = trained_model(name, bits, kind)
+            accs[label] = accuracy_metric(ds.task, ds.y_test, ens.predict(xb_te))
+        rows.append({
+            "name": f"fig9a/{name}",
+            "us_per_call": 0.0,
+            "derived": ";".join(f"{k}={v:.4f}" for k, v in accs.items())
+            + f";delta_8bit={accs['xtime_8bit']-accs['unconstrained']:+.4f}",
+        })
+    return rows

@@ -1,0 +1,45 @@
+"""Fig. 9(b): relative accuracy vs memristor/DAC defect rate."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FAST, budget, trained_model
+from repro.core.compile import compile_ensemble
+from repro.core.defects import (
+    inject_query_defects,
+    inject_table_defects,
+    relative_accuracy,
+)
+from repro.core.engine import XTimeEngine
+from repro.data.tabular import accuracy_metric
+
+FRACS = [0.002, 0.01, 0.05, 0.1]
+
+
+def run() -> list[dict]:
+    rows = []
+    repeats = budget(20, 6)
+    for name in ["churn", "eye"]:
+        ens, q, ds, xb_te = trained_model(name, "8bit", "gbdt")
+        xb = xb_te[:512]
+        y = ds.y_test[:512]
+        table = compile_ensemble(ens)
+        ideal = accuracy_metric(
+            ds.task, y, np.asarray(XTimeEngine(table, backend="jnp").predict(xb))
+        )
+        for frac in FRACS:
+            accs = []
+            for r in range(repeats):
+                rng = np.random.default_rng(1000 * r + 7)
+                t2 = inject_table_defects(table, frac, rng)
+                q2 = inject_query_defects(xb.astype(np.int32), frac, 256, rng)
+                pred = np.asarray(XTimeEngine(t2, backend="jnp").predict(q2))
+                accs.append(accuracy_metric(ds.task, y, pred))
+            mean, std = relative_accuracy(ideal, accs)
+            rows.append({
+                "name": f"fig9b/{name}/defect_{frac}",
+                "us_per_call": 0.0,
+                "derived": f"rel_acc={mean:.4f};std={std:.4f};ideal={ideal:.4f}",
+            })
+    return rows

@@ -1,0 +1,41 @@
+"""cam_match kernel micro-benchmarks: XLA-fused oracle throughput on CPU
+(the engine's distributed path) across CAM table sizes, + arithmetic
+intensity accounting for the roofline."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import budget, time_call
+from repro.kernels.ref import cam_match_ref
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(1)
+    for (b, r, f, c) in [
+        (256, 4096, 32, 8),
+        (256, 16384, 130, 8),
+        (budget(1024, 256), budget(65536, 16384), 130, 8),
+    ]:
+        low = rng.integers(0, 256, size=(r, f)).astype(np.int32)
+        high = np.minimum(low + rng.integers(0, 256, size=(r, f)), 256).astype(np.int32)
+        leaf = rng.normal(size=(r, c)).astype(np.float32)
+        q = rng.integers(0, 256, size=(b, f)).astype(np.int32)
+        fn = jax.jit(lambda qq, lo, hi, lf: cam_match_ref(qq, lo, hi, lf))
+        args = tuple(map(jnp.asarray, (q, low, high, leaf)))
+        us = time_call(lambda: fn(*args).block_until_ready())
+        compare_ops = 2 * b * r * f  # two int compares per cell
+        mac_ops = 2 * b * r * c
+        rows.append({
+            "name": f"kernel/cam_match_b{b}_r{r}_f{f}",
+            "us_per_call": us,
+            "derived": (
+                f"samples_per_s={b/(us*1e-6):.0f};"
+                f"gcompare_per_s={compare_ops/(us*1e-6)/1e9:.2f};"
+                f"bytes={(b*f*4 + 2*r*f*4 + r*c*4):.0f}"
+            ),
+        })
+    return rows

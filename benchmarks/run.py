@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  BENCH_FAST=0 for full budgets.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig8_area_power,
+        fig9_accuracy,
+        fig9b_defects,
+        fig10_latency_throughput,
+        fig11_scaling,
+        kernel_bench,
+        tableI_precision,
+    )
+
+    modules = [
+        ("fig8_area_power", fig8_area_power),
+        ("tableI_precision", tableI_precision),
+        ("fig11_scaling", fig11_scaling),
+        ("kernel_bench", kernel_bench),
+        ("fig9_accuracy", fig9_accuracy),
+        ("fig9b_defects", fig9b_defects),
+        ("fig10_latency_throughput", fig10_latency_throughput),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},-1,ERROR", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

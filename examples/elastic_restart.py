@@ -1,0 +1,41 @@
+"""Fault-tolerance demo: a training run is killed mid-flight and resumed
+— the resumed loss trajectory is bit-identical to an uninterrupted run
+(pure-function-of-step data + atomic checkpoints).
+
+Run:  PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.configs.llama32_3b import smoke
+from repro.ft.runtime import InjectedFailure
+from repro.launch.train import train
+
+
+def main() -> None:
+    cfg = smoke().replace(dtype="float32", remat=False)
+    kw = dict(global_batch=4, seq_len=64, ckpt_every=5, seed=0, log_every=5)
+    base = tempfile.mkdtemp(prefix="elastic_")
+    try:
+        print("== run A: crashes after step 12 ==")
+        try:
+            train(cfg, steps=25, run_dir=f"{base}/a", failure_at=12, **kw)
+        except InjectedFailure as e:
+            print(f"   !! {e}")
+        print("== run A resumed (from step-10 checkpoint) ==")
+        hist_a = train(cfg, steps=25, run_dir=f"{base}/a", **kw)
+        print("== run B: uninterrupted reference ==")
+        hist_b = train(cfg, steps=25, run_dir=f"{base}/b", **kw)
+        ref = {h["step"]: h["loss"] for h in hist_b}
+        worst = max(abs(h["loss"] - ref[h["step"]]) for h in hist_a)
+        print(f"\nmax |loss_resumed - loss_reference| = {worst:.2e} "
+              f"({'BIT-IDENTICAL' if worst == 0 else 'check determinism'})")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: the complete X-TIME pipeline from the paper (Fig. 7d).
+
+    dataset -> train GBDT -> 8-bit quantize -> compile to CAM rows ->
+    place on cores -> program the NoC -> run the engine -> chip report
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.baselines import TraversalBaseline
+from repro.core.compile import compile_ensemble, pack_cores
+from repro.core.engine import XTimeEngine
+from repro.core.noc import plan_noc
+from repro.core.perfmodel import gpu_perf_model, xtime_perf
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, train_gbdt
+from repro.data.tabular import accuracy_metric, make_dataset
+
+
+def main() -> None:
+    # 1. data + 8-bit feature grid (256 bins/feature, §III-B)
+    ds = make_dataset("churn")
+    quant = FeatureQuantizer.fit(ds.x_train, n_bins=256)
+    xb_train, xb_test = quant.transform(ds.x_train), quant.transform(ds.x_test)
+
+    # 2. train a gradient-boosted ensemble under the paper's HW constraints
+    ens = train_gbdt(
+        xb_train, ds.y_train, task="binary", n_bins=256,
+        params=GBDTParams(n_rounds=50, max_leaves=256, max_depth=8),
+    )
+    acc = accuracy_metric("binary", ds.y_test, ens.predict(xb_test))
+    print(f"[train]   {ens.n_trees} trees, max {ens.max_leaves} leaves, "
+          f"test acc {acc:.4f}")
+
+    # 3. compile: every root-to-leaf path -> one CAM row of [low, high) ranges
+    table = compile_ensemble(ens)
+    print(f"[compile] {table.n_rows} CAM rows x {table.n_features} features, "
+          f"{table.dont_care_fraction():.0%} don't-care cells")
+
+    # 4. placement + NoC program (accumulate/forward/batch, §III-D)
+    placement = pack_cores(table)
+    noc = plan_noc(table, placement)
+    print(f"[place]   {placement.n_cores_used} cores, "
+          f"{placement.max_trees_per_core} trees/core max, "
+          f"replication x{placement.replication}, NoC config '{noc.config}'")
+
+    # 5. inference: one associative match replaces D dependent gathers
+    engine = XTimeEngine(table, backend="jnp")
+    pred = np.asarray(engine.predict(xb_test))
+    ref = TraversalBaseline(ens).predict(xb_test)
+    print(f"[engine]  engine==traversal on {len(pred)} samples: "
+          f"{(pred == ref).all()}")
+
+    # 6. chip performance model (Eq. 4/5, Fig. 8 constants)
+    rep = xtime_perf(table, placement, noc)
+    gpu = gpu_perf_model(n_trees=ens.n_trees, depth=8)
+    print(f"[chip]    latency {rep.latency_ns:.0f} ns, throughput "
+          f"{rep.throughput_msps:,.0f} MS/s, {rep.power_w:.1f} W, "
+          f"{rep.energy_nj_per_dec:.2f} nJ/decision")
+    print(f"[vs GPU]  latency x{gpu.latency_ns/rep.latency_ns:,.0f} lower, "
+          f"throughput x{rep.throughput_msps/gpu.throughput_msps:,.0f} higher")
+
+
+if __name__ == "__main__":
+    main()

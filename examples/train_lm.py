@@ -1,0 +1,50 @@
+"""End-to-end training driver: train a llama-family model for a few
+hundred steps on the synthetic Markov-token stream, with fault-tolerant
+checkpointing.  Loss drops well below the unigram entropy as the model
+learns the transition structure.
+
+Default is CPU-sized (~7M params).  ``--hundred-m`` trains a ~100M-param
+config (same code path; several hours on this 1-core container, minutes
+on a real host).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+
+from repro.config import get_config
+from repro.launch.train import train
+from repro.optim.adamw import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--run-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--hundred-m", action="store_true")
+    args = ap.parse_args()
+
+    base = get_config("llama3.2-3b")
+    if args.hundred_m:  # ~100M params: 12L x 768 x 12H, 8k vocab
+        cfg = base.replace(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                           head_dim=0, d_ff=2048, vocab_size=8192, remat=False)
+        batch, seq = 16, 512
+    else:  # CPU-sized smoke of the same family
+        cfg = base.replace(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                           head_dim=0, d_ff=688, vocab_size=512, remat=False)
+        batch, seq = 8, 128
+
+    hist = train(
+        cfg, steps=args.steps, global_batch=batch, seq_len=seq,
+        run_dir=args.run_dir, ckpt_every=50, log_every=20,
+        opt_cfg=AdamWConfig(peak_lr=3e-3, warmup_steps=20,
+                            decay_steps=args.steps),
+    )
+    first = hist[0]["loss"]
+    last = min(h["loss"] for h in hist[-10:])
+    print(f"\nloss {first:.3f} -> {last:.3f} over {len(hist)} steps "
+          f"({'LEARNED' if last < first - 0.5 else 'check hyperparams'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""X-TIME as an inference service: batched tabular requests through the
+CAM engine, all four NoC programs (§III-D), and the analog-defect
+robustness study (Fig. 9b) on a live model.
+
+Run:  PYTHONPATH=src python examples/xtime_serving.py
+"""
+
+import numpy as np
+
+from repro.core.compile import compile_ensemble, pack_cores
+from repro.core.defects import inject_table_defects, relative_accuracy
+from repro.core.engine import XTimeEngine
+from repro.core.noc import plan_noc
+from repro.core.perfmodel import xtime_perf
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, train_gbdt
+from repro.data.tabular import accuracy_metric, make_dataset
+
+
+def main() -> None:
+    for name, label, batching in (("rossmann", "regression", False),
+                                  ("eye", "multiclass", False),
+                                  ("telco", "binary + input batching", True)):
+        ds = make_dataset(name)
+        q = FeatureQuantizer.fit(ds.x_train, 256)
+        ens = train_gbdt(
+            q.transform(ds.x_train), ds.y_train, task=ds.task, n_bins=256,
+            n_classes=ds.n_classes,
+            params=GBDTParams(n_rounds=30, max_leaves=64),
+        )
+        table = compile_ensemble(ens)
+        plc = pack_cores(table)
+        noc = plan_noc(table, plc, batching=batching)
+        label = f"{label} ({noc.config} NoC)"
+        eng = XTimeEngine(table, backend="jnp", noc_config=noc.engine_noc_config
+                          if noc.engine_noc_config != "batch" else "accumulate")
+        xb = q.transform(ds.x_test)
+        pred = np.asarray(eng.predict(xb))
+        acc = accuracy_metric(ds.task, ds.y_test, pred)
+        rep = xtime_perf(table, plc, noc)
+        print(f"{name:10s} {label:30s} acc={acc:.4f} "
+              f"router_bits={''.join(map(str, noc.router_bits))} "
+              f"tput={rep.throughput_msps:,.0f} MS/s "
+              f"energy={rep.energy_nj_per_dec:.2f} nJ/dec")
+
+    # defect robustness on the live multiclass service
+    ds = make_dataset("eye")
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    ens = train_gbdt(q.transform(ds.x_train), ds.y_train, task="multiclass",
+                     n_bins=256, n_classes=ds.n_classes,
+                     params=GBDTParams(n_rounds=20, max_leaves=64))
+    table = compile_ensemble(ens)
+    xb = q.transform(ds.x_test)
+    ideal = accuracy_metric("multiclass", ds.y_test,
+                            np.asarray(XTimeEngine(table).predict(xb)))
+    print("\ndefect robustness (memristor 1-level flips):")
+    for frac in (0.002, 0.02, 0.1):
+        accs = []
+        for r in range(5):
+            t2 = inject_table_defects(table, frac, np.random.default_rng(r))
+            accs.append(accuracy_metric(
+                "multiclass", ds.y_test,
+                np.asarray(XTimeEngine(t2).predict(xb))))
+        mean, std = relative_accuracy(ideal, accs)
+        print(f"  {frac:5.1%} defects -> relative accuracy "
+              f"{mean:.4f} +/- {std:.4f}")
+
+
+if __name__ == "__main__":
+    main()

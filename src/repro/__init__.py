@@ -1,0 +1,11 @@
+"""repro — X-TIME (CAM-based tree-ensemble inference) rebuilt as a JAX framework.
+
+Public API surface:
+    repro.core       the paper's contribution (tree training, CAM compile, engine)
+    repro.kernels    Pallas TPU kernels (cam_match) + jnp oracles
+    repro.models     LM substrate for the assigned architectures
+    repro.configs    architecture registry (``get_config(name)``)
+    repro.launch     mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    CheckpointManager,
+)

@@ -1,0 +1,22 @@
+"""X-TIME core: the paper's contribution as a composable JAX module.
+
+Pipeline:  train (trees.py)  ->  quantize (quantize.py)  ->  compile to CAM
+table (compile.py)  ->  inference engine (engine.py, kernels/cam_match.py)
+->  NoC reduction (noc.py)  ->  chip performance model (perfmodel.py).
+"""
+
+from repro.core.trees import (  # noqa: F401
+    Tree,
+    Ensemble,
+    GBDTParams,
+    RFParams,
+    train_gbdt,
+    train_rf,
+)
+from repro.core.quantize import FeatureQuantizer  # noqa: F401
+from repro.core.compile import CAMTable, compile_ensemble, pack_cores  # noqa: F401
+
+# NOTE: XTimeEngine is intentionally NOT re-exported here — engine.py
+# depends on repro.kernels which depends on repro.core.precision; importing
+# it eagerly would make `repro.kernels.ref` -> `repro.core` circular.
+# Use `from repro.core.engine import XTimeEngine`.

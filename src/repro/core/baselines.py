@@ -1,0 +1,97 @@
+"""Baseline inference paths the paper compares against (§II-B, §V-B).
+
+``TraversalBaseline`` is the GPU-style implementation: one logical thread
+per (sample, tree) walking D dependent node fetches (gathers) — expressed
+in JAX as a vmapped fori_loop over a padded struct-of-arrays forest.  It
+is numerically identical to ``Ensemble.raw_margin`` and serves two roles:
+  * the measured same-hardware baseline for the engine benchmarks
+    (CAM single-shot match vs O(D) dependent gathers), and
+  * the functional model of the Booster/FPGA LUT cores (§V-B), whose chip
+    performance is modeled in perfmodel.booster_perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trees import Ensemble
+
+
+class TraversalBaseline:
+    """Padded array-of-trees traversal, jit/vmap friendly."""
+
+    def __init__(self, ens: Ensemble) -> None:
+        self.ens = ens
+        T = ens.n_trees
+        N = max(t.n_nodes for t in ens.trees)
+        feat = np.full((T, N), -1, dtype=np.int32)
+        thr = np.zeros((T, N), dtype=np.int32)
+        left = np.zeros((T, N), dtype=np.int32)
+        right = np.zeros((T, N), dtype=np.int32)
+        val = np.zeros((T, N), dtype=np.float32)
+        cls = np.zeros((T, N), dtype=np.int32)
+        for i, t in enumerate(ens.trees):
+            n = t.n_nodes
+            feat[i, :n] = t.feature
+            thr[i, :n] = t.threshold
+            left[i, :n] = t.left
+            right[i, :n] = t.right
+            val[i, :n] = t.value
+            if ens.leaf_class_mode == "leaf":
+                cls[i, :n] = ens.leaf_class[i]
+            else:
+                cls[i, :n] = 0 if ens.tree_class is None else int(ens.tree_class[i])
+        self.feature = jnp.asarray(feat)
+        self.threshold = jnp.asarray(thr)
+        self.left = jnp.asarray(left)
+        self.right = jnp.asarray(right)
+        self.value = jnp.asarray(val)
+        self.leaf_cls = jnp.asarray(cls)
+        self.depth = int(max(t.max_depth for t in ens.trees))
+        self.n_outputs = ens.n_outputs
+
+        ens_kind = ens.kind
+        n_trees = ens.n_trees
+        base = float(ens.base_score)
+        n_out = self.n_outputs
+        depth = self.depth
+
+        def margin(q):  # q: (B, F) int32
+            def one_tree(feat_t, thr_t, left_t, right_t, val_t, cls_t):
+                def walk(qrow):
+                    def body(_, node):
+                        f = feat_t[node]
+                        is_leaf = f < 0
+                        go_left = qrow[jnp.maximum(f, 0)] < thr_t[node]
+                        nxt = jnp.where(go_left, left_t[node], right_t[node])
+                        return jnp.where(is_leaf, node, nxt)
+
+                    node = jax.lax.fori_loop(0, depth, body, jnp.int32(0))
+                    return val_t[node], cls_t[node]
+
+                return jax.vmap(walk)(q)  # (B,), (B,)
+
+            vals, clss = jax.vmap(one_tree)(
+                self.feature, self.threshold, self.left, self.right, self.value, self.leaf_cls
+            )  # (T, B)
+            onehot = jax.nn.one_hot(clss, n_out, dtype=vals.dtype)  # (T, B, C)
+            out = jnp.einsum("tb,tbc->bc", vals, onehot) + base
+            if ens_kind == "rf":
+                out = out / jnp.float32(max(1, n_trees))
+            return out
+
+        self._margin = jax.jit(margin)
+
+    def raw_margin(self, q_bins: np.ndarray) -> jnp.ndarray:
+        return self._margin(jnp.asarray(q_bins, dtype=jnp.int32))
+
+    def predict(self, q_bins: np.ndarray) -> np.ndarray:
+        m = np.asarray(self.raw_margin(q_bins))
+        ens = self.ens
+        if ens.task == "regression":
+            return m[:, 0]
+        if ens.task == "binary" and ens.kind == "gbdt":
+            return (m[:, 0] > 0.0).astype(np.int32)
+        return np.argmax(m, axis=1).astype(np.int32)

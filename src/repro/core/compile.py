@@ -1,0 +1,232 @@
+"""X-TIME compiler: tree ensembles -> CAM tables -> core placement (§II-D, §III-A).
+
+Every root-to-leaf path of every tree becomes one CAM row storing per
+feature an integer range ``[low, high)`` over the quantizer's bin grid
+(don't-care = the full range ``[0, n_bins)``), plus the leaf value, tree id
+and class id — the ``L x (2*N_feat + 3)`` table of §III-A.
+
+``pack_cores`` then performs the paper's placement: trees are assigned to
+cores (first-fit decreasing over the N_words = N_stacked * H row budget),
+features are segmented over queued arrays, and models smaller than the chip
+are replicated for input batching (§III-D).  The placement feeds the cycle
+model in ``perfmodel.py`` and defines the row-shard boundaries of the
+distributed engine.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.trees import Ensemble
+
+
+@dataclass
+class CAMTable:
+    """The compiled ensemble: one row per leaf (root-to-leaf path)."""
+
+    low: np.ndarray  # (R, F) int32, inclusive lower bin bound
+    high: np.ndarray  # (R, F) int32, exclusive upper bin bound
+    leaf: np.ndarray  # (R,) float32 leaf value (logit / vote / mean)
+    tree_id: np.ndarray  # (R,) int32
+    class_id: np.ndarray  # (R,) int32, output channel of the leaf
+    n_trees: int
+    n_features: int
+    n_bins: int
+    n_outputs: int
+    task: str
+    kind: str
+    base_score: float
+    n_classes: int
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.low.shape[0])
+
+    def dont_care_fraction(self) -> float:
+        """Fraction of cells programmed to the full range (wildcards)."""
+        dc = (self.low == 0) & (self.high == self.n_bins)
+        return float(dc.mean())
+
+    def leaf_matrix(self) -> np.ndarray:
+        """(R, n_outputs) leaf values scattered to their class channel.
+
+        ``match @ leaf_matrix`` is the in-core accumulation + class routing:
+        the MXU replacement for the paper's MMR + SRAM + ACC path.
+        """
+        m = np.zeros((self.n_rows, self.n_outputs), dtype=np.float32)
+        m[np.arange(self.n_rows), self.class_id] = self.leaf
+        return m
+
+
+def compile_ensemble(ens: Ensemble) -> CAMTable:
+    """Traverse every tree, emit one CAM row per leaf."""
+    F, B = ens.n_features, ens.n_bins
+    lows: list[np.ndarray] = []
+    highs: list[np.ndarray] = []
+    leaves: list[float] = []
+    tree_ids: list[int] = []
+    class_ids: list[int] = []
+
+    for i, tree in enumerate(ens.trees):
+        # iterative DFS carrying the [low, high) box of the current path
+        stack = [(0, np.zeros(F, dtype=np.int32), np.full(F, B, dtype=np.int32))]
+        while stack:
+            node, lo, hi = stack.pop()
+            f = int(tree.feature[node])
+            if f < 0:  # leaf
+                lows.append(lo)
+                highs.append(hi)
+                leaves.append(float(tree.value[node]))
+                tree_ids.append(i)
+                if ens.leaf_class_mode == "leaf":
+                    class_ids.append(int(ens.leaf_class[i][node]))
+                else:
+                    c = 0 if ens.tree_class is None else int(ens.tree_class[i])
+                    class_ids.append(c)
+                continue
+            t = int(tree.threshold[node])
+            llo, lhi = lo.copy(), hi.copy()
+            lhi[f] = min(lhi[f], t)  # left: bin < t
+            rlo, rhi = lo.copy(), hi.copy()
+            rlo[f] = max(rlo[f], t)  # right: bin >= t
+            stack.append((int(tree.right[node]), rlo, rhi))
+            stack.append((int(tree.left[node]), llo, lhi))
+
+    return CAMTable(
+        low=np.stack(lows).astype(np.int32),
+        high=np.stack(highs).astype(np.int32),
+        leaf=np.asarray(leaves, dtype=np.float32),
+        tree_id=np.asarray(tree_ids, dtype=np.int32),
+        class_id=np.asarray(class_ids, dtype=np.int32),
+        n_trees=ens.n_trees,
+        n_features=F,
+        n_bins=B,
+        n_outputs=ens.n_outputs,
+        task=ens.task,
+        kind=ens.kind,
+        base_score=ens.base_score,
+        n_classes=ens.n_classes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Core placement (§III-A, §III-C)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ChipSpec:
+    """X-TIME single-chip architecture constants (§III-C, §IV-B)."""
+
+    n_cores: int = 4096
+    array_rows: int = 128  # H
+    array_cols: int = 65
+    n_stacked: int = 2  # row-wise extension: N_words = n_stacked * array_rows
+    n_queued: int = 2  # column-wise extension: width = n_queued * array_cols
+    clock_ghz: float = 1.0
+    lambda_cam: int = 4  # cycles per aCAM search (precharge, MSB, LSB, latch)
+    lambda_core: int = 12  # end-to-end core latency in cycles
+    peak_power_w: float = 19.0
+    n_routers: int = 1365  # H-tree over 4096 cores (4096/4 + ... + 1)
+    flit_bytes: int = 8  # 64-bit leaf flits
+    noc_radix: int = 4
+
+    @property
+    def n_words(self) -> int:
+        return self.n_stacked * self.array_rows
+
+    @property
+    def core_width(self) -> int:
+        return self.n_queued * self.array_cols
+
+
+@dataclass
+class CorePlacement:
+    """Result of packing one model onto the chip."""
+
+    spec: ChipSpec
+    # per used core: list of tree indices mapped to it
+    core_trees: list[list[int]] = field(default_factory=list)
+    core_rows_used: list[int] = field(default_factory=list)
+    n_feature_segments: int = 1  # queued-array groups of <=65 features
+    replication: int = 1  # input-batching copies of the whole model (§III-D)
+
+    @property
+    def n_cores_used(self) -> int:
+        return len(self.core_trees)
+
+    @property
+    def max_trees_per_core(self) -> int:
+        return max((len(t) for t in self.core_trees), default=0)
+
+    @property
+    def word_utilization(self) -> float:
+        cap = self.n_cores_used * self.spec.n_words
+        return (sum(self.core_rows_used) / cap) if cap else 0.0
+
+
+def pack_cores(table: CAMTable, spec: ChipSpec | None = None) -> CorePlacement:
+    """First-fit-decreasing placement of trees onto cores.
+
+    A tree's leaves must live in one core (the MMR iterates matches locally,
+    §III-A); the paper's hyperparameter search bounds N_leaves,max = 256 =
+    N_words so this always holds for compliant models.
+    """
+    spec = spec or ChipSpec()
+    leaves_per_tree = np.bincount(table.tree_id, minlength=table.n_trees)
+    if leaves_per_tree.max(initial=0) > spec.n_words:
+        raise ValueError(
+            f"tree with {int(leaves_per_tree.max())} leaves exceeds core capacity "
+            f"N_words={spec.n_words}; retrain with max_leaves<={spec.n_words}"
+        )
+
+    order = np.argsort(-leaves_per_tree)  # decreasing
+    core_trees: list[list[int]] = []
+    core_free: list[int] = []
+    for t in order:
+        need = int(leaves_per_tree[t])
+        placed = False
+        for c in range(len(core_trees)):
+            if core_free[c] >= need:
+                core_trees[c].append(int(t))
+                core_free[c] -= need
+                placed = True
+                break
+        if not placed:
+            core_trees.append([int(t)])
+            core_free.append(spec.n_words - need)
+    n_used = len(core_trees)
+    if n_used > spec.n_cores:
+        raise ValueError(
+            f"model needs {n_used} cores > chip capacity {spec.n_cores}; "
+            "shard across chips (PCIe card scenario, §III-D)"
+        )
+
+    n_seg = int(np.ceil(table.n_features / spec.array_cols))
+    replication = max(1, spec.n_cores // max(1, n_used))
+    return CorePlacement(
+        spec=spec,
+        core_trees=core_trees,
+        core_rows_used=[spec.n_words - f for f in core_free],
+        n_feature_segments=n_seg,
+        replication=replication,
+    )
+
+
+def padded_table(
+    table: CAMTable, row_multiple: int = 256
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Pad rows to a multiple (tile/shard size). Padding rows can never match
+    (low=1 > high=0 for every feature).  Returns (low, high, leaf_matrix, R_pad).
+    """
+    R = table.n_rows
+    R_pad = int(np.ceil(R / row_multiple)) * row_multiple
+    low = np.ones((R_pad, table.n_features), dtype=np.int32)
+    high = np.zeros((R_pad, table.n_features), dtype=np.int32)
+    low[:R] = table.low
+    high[:R] = table.high
+    leaf_m = np.zeros((R_pad, table.n_outputs), dtype=np.float32)
+    leaf_m[:R] = table.leaf_matrix()
+    return low, high, leaf_m, R_pad

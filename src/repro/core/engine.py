@@ -1,0 +1,207 @@
+"""X-TIME inference engine: compiled CAM table -> batched predictions.
+
+Single-device path: the Pallas kernel (TPU) or its jnp oracle (CPU).
+Distributed path: the CAM rows (cores) are sharded on the mesh ``model``
+axis and the query batch on ``data`` (× ``pod``); the H-tree in-network
+reduction of §III-D becomes an ICI all-reduce over the ``model`` axis (see
+noc.py for the router-bit -> collective mapping and DESIGN.md §2).
+
+The engine reproduces ``Ensemble.raw_margin`` / ``Ensemble.predict``
+bit-for-bit on binned inputs — that equivalence is the correctness
+contract (tested in tests/test_engine.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.compile import CAMTable
+from repro.kernels import ops as kops
+from repro.kernels.ref import cam_match_ref
+
+
+@dataclass
+class EngineArrays:
+    low: jnp.ndarray  # (R_pad, F_pad) int32
+    high: jnp.ndarray
+    leaf: jnp.ndarray  # (R_pad, C_pad) float32
+    r_pad: int
+    f_pad: int
+    c_pad: int
+
+
+class XTimeEngine:
+    """Batched tree-ensemble inference on a compiled CAM table.
+
+    Args:
+      table: compiled ensemble.
+      backend: 'pallas' (TPU kernel; interpret=True on CPU) or 'jnp'
+        (XLA-fused oracle — the distributed default).
+      mode: cell comparison mode ('direct' | 'msb_lsb' | 'two_cycle').
+      mesh: optional jax Mesh. When given, rows are sharded over
+        ``row_axis`` and batch over ``batch_axis`` (+ leading 'pod' axis if
+        present), and the margin all-reduce maps the paper's NoC
+        accumulate config.
+      noc_config: 'accumulate' shards rows (regression/binary/multiclass —
+        the router sums partial margins); 'batch' replicates the table and
+        shards batch over every mesh axis (input batching with replicated
+        trees, §III-D Fig. 7c).
+    """
+
+    def __init__(
+        self,
+        table: CAMTable,
+        *,
+        backend: str = "jnp",
+        mode: str = "direct",
+        mesh: Mesh | None = None,
+        row_axis: str = "model",
+        batch_axis: str = "data",
+        noc_config: str = "accumulate",
+        b_blk: int = 128,
+        r_blk: int = 256,
+        interpret: bool = True,
+    ) -> None:
+        self.table = table
+        self.backend = backend
+        self.mode = mode
+        self.mesh = mesh
+        self.row_axis = row_axis
+        self.batch_axis = batch_axis
+        self.noc_config = noc_config
+        self.b_blk = b_blk
+        self.r_blk = r_blk
+        self.interpret = interpret
+
+        # row padding must also be divisible by the row-shard count
+        row_mult = r_blk
+        if mesh is not None and noc_config == "accumulate":
+            row_mult = r_blk * mesh.shape[row_axis]
+        low, high, leaf = kops.pad_tables(
+            table.low, table.high, table.leaf_matrix(),
+            r_blk=row_mult, c_mult=8, n_bins=table.n_bins,
+        )
+        self.arrays = EngineArrays(
+            low=jnp.asarray(low),
+            high=jnp.asarray(high),
+            leaf=jnp.asarray(leaf),
+            r_pad=low.shape[0],
+            f_pad=low.shape[1],
+            c_pad=leaf.shape[1],
+        )
+        if mesh is not None:
+            self._place_on_mesh()
+        self._fn_cache: dict = {}
+
+    # -- placement ---------------------------------------------------------
+
+    def _batch_spec(self) -> P:
+        axes = [self.batch_axis]
+        if self.mesh is not None and "pod" in self.mesh.axis_names:
+            axes = ["pod", self.batch_axis]
+        if self.noc_config == "batch":
+            axes.append(self.row_axis)  # batch over cores too (replicated trees)
+        return P(tuple(axes))
+
+    def _row_spec(self) -> P:
+        if self.noc_config == "batch":
+            return P()  # table replicated in every core group
+        return P(self.row_axis)
+
+    def _place_on_mesh(self) -> None:
+        assert self.mesh is not None
+        rs = NamedSharding(self.mesh, self._row_spec())
+        self.arrays.low = jax.device_put(self.arrays.low, rs)
+        self.arrays.high = jax.device_put(self.arrays.high, rs)
+        self.arrays.leaf = jax.device_put(self.arrays.leaf, rs)
+
+    # -- compute -----------------------------------------------------------
+
+    def _margin_fn(self) -> Callable:
+        """Raw-margin function of (q, low, high, leaf) — jit-compatible."""
+        table = self.table
+        backend, mode = self.backend, self.mode
+        b_blk, r_blk, interpret = self.b_blk, self.r_blk, self.interpret
+
+        def margin(q, low, high, leaf):
+            if backend == "pallas":
+                out = kops.cam_match(
+                    q, low, high, leaf,
+                    out_b=q.shape[0], out_c=leaf.shape[1],
+                    b_blk=b_blk, r_blk=r_blk, mode=mode, interpret=interpret,
+                )
+            else:
+                out = cam_match_ref(q, low, high, leaf, mode=mode)
+            out = out[:, : table.n_outputs]
+            out = out + jnp.float32(table.base_score)
+            if table.kind == "rf":
+                out = out / jnp.float32(max(1, table.n_trees))
+            return out
+
+        return margin
+
+    def _jitted(self, key: str) -> Callable:
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        margin = self._margin_fn()
+        want_pred = key == "predict"
+        table = self.table
+
+        def fn(q, low, high, leaf):
+            m = margin(q, low, high, leaf)
+            if not want_pred:
+                return m
+            if table.task == "regression":
+                return m[:, 0]
+            if table.task == "binary" and table.kind == "gbdt":
+                return (m[:, 0] > 0.0).astype(jnp.int32)
+            return jnp.argmax(m, axis=1).astype(jnp.int32)
+
+        if self.mesh is not None:
+            bs = NamedSharding(self.mesh, self._batch_spec())
+            rs = NamedSharding(self.mesh, self._row_spec())
+            out_s = NamedSharding(self.mesh, self._batch_spec())
+            jfn = jax.jit(fn, in_shardings=(bs, rs, rs, rs), out_shardings=out_s)
+        else:
+            jfn = jax.jit(fn)
+        self._fn_cache[key] = jfn
+        return jfn
+
+    def _prep_queries(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+        q = kops.pad_queries(jnp.asarray(q_bins), self.arrays.f_pad, b_blk=self.b_blk)
+        if self.mesh is not None:
+            q = jax.device_put(q, NamedSharding(self.mesh, self._batch_spec()))
+        return q
+
+    def raw_margin(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+        """(B, n_outputs) — matches ``Ensemble.raw_margin`` on binned input."""
+        B = q_bins.shape[0]
+        q = self._prep_queries(q_bins)
+        a = self.arrays
+        return self._jitted("margin")(q, a.low, a.high, a.leaf)[:B]
+
+    def predict(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+        """Final predictions — matches ``Ensemble.predict``."""
+        B = q_bins.shape[0]
+        q = self._prep_queries(q_bins)
+        a = self.arrays
+        return self._jitted("predict")(q, a.low, a.high, a.leaf)[:B]
+
+    # -- dry-run hooks -------------------------------------------------------
+
+    def serve_step_for_dryrun(self):
+        """(fn, in_shardings, out_shardings) for launch/dryrun.py."""
+        assert self.mesh is not None, "dry-run requires a mesh"
+        margin = self._margin_fn()
+        bs = NamedSharding(self.mesh, self._batch_spec())
+        rs = NamedSharding(self.mesh, self._row_spec())
+        return margin, (bs, rs, rs, rs), bs
+
+    def input_specs(self, batch: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((batch, self.arrays.f_pad), jnp.int32)

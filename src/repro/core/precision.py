@@ -1,0 +1,115 @@
+"""Increased-precision analog CAM arithmetic (§III-B, Eq. 1-3, Table I).
+
+Memristor cells hold M=4 bits; the paper's macro-cell evaluates an
+N=2M=8-bit range compare by splitting the threshold T = 16*T_MSB + T_LSB
+and the query q = 16*q_MSB + q_LSB and computing (Eq. 3):
+
+    T_L <= q < T_H  <=>
+        [(q_M >= T_LM + 1) OR  (q_L >= T_LL)] AND (q_M >= T_LM)
+    AND [(q_M <  T_HM)     OR  (q_L <  T_HL)] AND (q_M <  T_HM + 1)
+
+This module reproduces that logic bit-exactly (``match_msb_lsb``), plus a
+cycle-level simulation of the two-step search of Table I
+(``match_two_cycle``): cycle 1 evaluates the OR brackets with the LSB and
+shifted-MSB inputs; cycle 2 keeps the match line charged only if the
+conjunctive MSB terms also hold ("always care" on the LSB sub-cell).  Both
+are property-tested against the direct comparison ``(T_L <= q) & (q < T_H)``
+over the full 8-bit space.
+
+All functions are pure jnp and vectorize over arbitrary leading shapes, so
+they drop into the engine / Pallas kernel as an alternate match mode.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+M_BITS = 4
+M_LEVELS = 1 << M_BITS  # 16 analog levels per sub-cell
+
+
+def split_msb_lsb(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """v in [0, 256) -> (v >> 4, v & 15), each an M-bit quantity."""
+    v = v.astype(jnp.int32)
+    return v >> M_BITS, v & (M_LEVELS - 1)
+
+
+def match_direct(q: jnp.ndarray, t_low: jnp.ndarray, t_high: jnp.ndarray) -> jnp.ndarray:
+    """The ideal 8-bit comparison the macro-cell must reproduce."""
+    q = q.astype(jnp.int32)
+    return (t_low.astype(jnp.int32) <= q) & (q < t_high.astype(jnp.int32))
+
+
+def match_inclusive(q: jnp.ndarray, t_low: jnp.ndarray, t_high: jnp.ndarray) -> jnp.ndarray:
+    """Compact uint8 table format (EXPERIMENTS.md §Perf X1): INCLUSIVE
+    upper bound so all of [0, 255] fits in uint8 — low <= q <= high.
+    Never-match rows encode low=1 > high=0; always-match cells low=0,
+    high=255.  Compared in the native (unsigned) dtype: no upcast."""
+    return (t_low <= q) & (q <= t_high)
+
+
+def match_msb_lsb(q: jnp.ndarray, t_low: jnp.ndarray, t_high: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3 evaluated with only M-bit comparisons (the macro-cell logic)."""
+    qm, ql = split_msb_lsb(q)
+    tlm, tll = split_msb_lsb(t_low)
+    thm, thl = split_msb_lsb(t_high)
+    lower = ((qm >= tlm + 1) | (ql >= tll)) & (qm >= tlm)  # Eq. 2
+    upper = ((qm < thm) | (ql < thl)) & (qm < thm + 1)  # dual for q < T_H
+    return lower & upper
+
+
+def match_two_cycle(q: jnp.ndarray, t_low: jnp.ndarray, t_high: jnp.ndarray) -> jnp.ndarray:
+    """Cycle-level simulation of the Table-I two-step search.
+
+    The physical match line (MAL) is precharged once; each cycle can only
+    *discharge* it (wired-AND across cycles).  Per Table I:
+
+      cycle 1  inputs: q_LLSB=q_LSB, q_HLSB=q_LSB, q_LMSB=q_MSB-1, q_HMSB=q_MSB
+               -> each macro-cell's OR of (MSB sub-cell, LSB sub-cell) must
+               hold: [(q_M-1 >= T_LM) | (q_L >= T_LL)] for the lower bound
+               and [(q_M < T_HM) | (q_L < T_HL)] for the upper bound.
+      cycle 2  inputs: q_LLSB=VDD, q_HLSB=GND ("always care", i.e. the LSB
+               sub-cells are driven to *always mismatch* given the lo/hi
+               side circuit polarity), q_LMSB=q_MSB, q_HMSB=q_MSB-1
+               -> the macro-cell OR degenerates to its MSB term, evaluating
+               the conjunctive terms (q_M >= T_LM) and (q_M < T_HM + 1).
+
+    Because the MAL can only be discharged, the state after cycle 2 is the
+    AND of both cycles' evaluations, which equals Eq. 3.
+    """
+    qm, ql = split_msb_lsb(q)
+    tlm, tll = split_msb_lsb(t_low)
+    thm, thl = split_msb_lsb(t_high)
+
+    # cycle 1: OR brackets.  Lower-bound macro-cell: MSB sub-cell sees
+    # q_MSB-1 against ">= T_LM" (i.e. q_MSB >= T_LM+1); LSB sub-cell sees
+    # q_LSB against ">= T_LL".  Upper-bound: MSB sub-cell q_MSB < T_HM, LSB
+    # q_LSB < T_HL.  The macro-cell keeps MAL charged if either sub-cell
+    # matches (parallel pull-down paths in series with each other, Fig. 5a).
+    cyc1_lower = ((qm - 1) >= tlm) | (ql >= tll)
+    cyc1_upper = (qm < thm) | (ql < thl)
+    mal_after_1 = cyc1_lower & cyc1_upper
+
+    # cycle 2: LSB sub-cells driven to always-mismatch (VDD/GND per Table I),
+    # so the macro-cell OR reduces to the MSB sub-cell's standalone term.
+    lsb_forced_mismatch = jnp.zeros_like(ql, dtype=bool)
+    cyc2_lower = (qm >= tlm) | lsb_forced_mismatch
+    cyc2_upper = ((qm - 1) < thm) | lsb_forced_mismatch  # q_MSB < T_HM + 1
+    mal_after_2 = mal_after_1 & cyc2_lower & cyc2_upper
+
+    return mal_after_2
+
+
+def macro_cell_count(n_features: int, n_bits: int = 8) -> int:
+    """aCAM sub-cells per row for the given precision (area model input).
+
+    Direct unary extension would need 2^(N-M) cells per threshold; the
+    paper's scheme needs exactly 2 sub-cells per macro-cell (×2 thresholds
+    folded into one macro-cell pair) — doubling area and search latency
+    rather than exponentiating them (§III-B).
+    """
+    if n_bits <= M_BITS:
+        return n_features  # single sub-cell per feature
+    if n_bits <= 2 * M_BITS:
+        return 2 * n_features  # the paper's macro-cell
+    raise ValueError(">8-bit thresholds are out of the paper's design space")

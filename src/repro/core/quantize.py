@@ -1,0 +1,69 @@
+"""Per-feature quantile binning — the paper's N_bit feature grid (§III-B).
+
+X-TIME represents thresholds and queries on an N_bit grid (256 bins for the
+8-bit configuration that matches FP accuracy, 16 bins for the 4-bit
+iso-area ablation).  ``FeatureQuantizer`` computes per-feature quantile cut
+points on training data; trees are trained *directly on bins* so the CAM
+table, the traversal baseline, and the float model agree bit-exactly.
+
+Convention (shared with trees.py and compile.py):
+    bin(x) = searchsorted(edges, x, side='right')  in [0, n_bins-1]
+    split "bin < t" == "x < edges[t-1]"
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class FeatureQuantizer:
+    edges: list[np.ndarray]  # per feature, ascending unique cut points (<= n_bins-1)
+    n_bins: int
+
+    @property
+    def n_features(self) -> int:
+        return len(self.edges)
+
+    @staticmethod
+    def fit(x: np.ndarray, n_bins: int = 256) -> "FeatureQuantizer":
+        """Quantile cuts per feature; duplicate quantiles are collapsed."""
+        if not 2 <= n_bins <= 65536:
+            raise ValueError(f"n_bins must be in [2, 65536], got {n_bins}")
+        edges = []
+        qs = np.linspace(0, 1, n_bins + 1)[1:-1]
+        for f in range(x.shape[1]):
+            col = x[:, f]
+            col = col[np.isfinite(col)]
+            if col.size == 0:
+                edges.append(np.zeros((0,), dtype=np.float64))
+                continue
+            e = np.unique(np.quantile(col, qs))
+            # drop degenerate cuts at the extremes (everything on one side)
+            e = e[(e > col.min()) & (e <= col.max())]
+            edges.append(np.asarray(e, dtype=np.float64))
+        return FeatureQuantizer(edges=edges, n_bins=n_bins)
+
+    def transform(self, x: np.ndarray) -> np.ndarray:
+        """Float features -> integer bins (n, F).
+
+        dtype is uint8 when n_bins <= 256 (the paper's DAC input width),
+        else int32.  NaN (missing) maps to bin 0 — the trainer can still
+        route it; the CAM don't-care covers the missing-feature case.
+        """
+        out = np.zeros(x.shape, dtype=np.int64)
+        for f in range(x.shape[1]):
+            col = np.nan_to_num(x[:, f], nan=-np.inf)
+            out[:, f] = np.searchsorted(self.edges[f], col, side="right")
+        dtype = np.uint8 if self.n_bins <= 256 else np.int32
+        return out.astype(dtype)
+
+    def effective_bins(self, f: int) -> int:
+        """Number of distinct bins actually realizable for feature f."""
+        return int(self.edges[f].shape[0]) + 1
+
+    def threshold_value(self, f: int, t: int) -> float:
+        """Float-space threshold for split 'bin < t' (x < edges[t-1])."""
+        return float(self.edges[f][t - 1])

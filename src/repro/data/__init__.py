@@ -1,0 +1,5 @@
+"""Data pipelines: synthetic tabular datasets (paper benchmarks, Table II
+analogs) and a deterministic, resumable synthetic token pipeline for the
+LM substrate."""
+
+from repro.data.tabular import TabularDataset, make_dataset, PAPER_DATASETS  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.ft.runtime import FaultTolerantRunner, StragglerMonitor, Heartbeat  # noqa: F401

@@ -1,0 +1,155 @@
+"""Fault-tolerance runtime: checkpoint/restart driver, heartbeats,
+straggler detection.
+
+At 1000+ nodes the relevant failure envelope is: (a) a worker dies
+mid-step (hardware), (b) a worker heartbeats but runs slow (straggler —
+thermal, network, preemption), (c) the coordinator must restart the job on
+fewer/more nodes (elastic).  The pieces here compose those behaviours and
+are integration-tested on CPU by injecting failures:
+
+  * ``Heartbeat`` — per-worker liveness file with a monotonic counter;
+    ``dead_workers`` flags anything past the timeout (the file protocol is
+    what a real multi-host deployment would put on shared storage).
+  * ``StragglerMonitor`` — per-step wall-time EWMA; a step slower than
+    ``threshold`` x median flags the step.  The trainer's response is to
+    record the event and (in the elastic driver) exclude the worker on
+    the next restart boundary; on TPU pods the equivalent production
+    response is re-slicing.
+  * ``FaultTolerantRunner`` — wraps a step function with periodic async
+    checkpoints and replays from the latest checkpoint after a (simulated
+    or real) crash; data is a pure function of step so the resumed loss
+    trajectory is bit-identical (tested).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager, latest_step, restore_checkpoint
+
+
+class Heartbeat:
+    def __init__(self, run_dir: str, worker_id: int, timeout_s: float = 60.0):
+        self.dir = os.path.join(run_dir, "heartbeats")
+        os.makedirs(self.dir, exist_ok=True)
+        self.worker_id = worker_id
+        self.timeout_s = timeout_s
+        self._count = 0
+
+    def beat(self) -> None:
+        self._count += 1
+        path = os.path.join(self.dir, f"worker_{self.worker_id}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"count": self._count, "time": time.time()}, f)
+        os.replace(tmp, path)
+
+    def dead_workers(self) -> list[int]:
+        now = time.time()
+        dead = []
+        for fn in os.listdir(self.dir):
+            if not fn.startswith("worker_"):
+                continue
+            with open(os.path.join(self.dir, fn)) as f:
+                info = json.load(f)
+            if now - info["time"] > self.timeout_s:
+                dead.append(int(fn.split("_")[1].split(".")[0]))
+        return sorted(dead)
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 3.0
+    window: int = 32
+    times: list[float] = field(default_factory=list)
+    events: list[dict] = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is flagged as a straggler."""
+        hist = self.times[-self.window:]
+        self.times.append(dt)
+        if len(hist) < 8:
+            return False
+        med = float(np.median(hist))
+        if dt > self.threshold * med:
+            self.events.append({"step": step, "dt": dt, "median": med})
+            return True
+        return False
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+class FaultTolerantRunner:
+    """Checkpoint/restart training driver.
+
+    step_fn: (state, step) -> (state, metrics); state is a pytree.
+    The runner checkpoints every ``ckpt_every`` steps (async), restores
+    from the latest checkpoint on (re)start, and records straggler events.
+    ``failure_at`` injects a crash after that step completes (tests).
+    """
+
+    def __init__(
+        self,
+        run_dir: str,
+        step_fn: Callable[[Any, int], tuple[Any, dict]],
+        init_state: Callable[[], Any],
+        *,
+        ckpt_every: int = 10,
+        keep: int = 3,
+        worker_id: int = 0,
+    ):
+        self.run_dir = run_dir
+        self.step_fn = step_fn
+        self.init_state = init_state
+        self.ckpt_every = ckpt_every
+        self.mgr = CheckpointManager(os.path.join(run_dir, "ckpt"), keep=keep)
+        self.heartbeat = Heartbeat(run_dir, worker_id)
+        self.straggler = StragglerMonitor()
+
+    def resume_or_init(self, placer: Callable | None = None) -> tuple[int, Any]:
+        ckpt_dir = os.path.join(self.run_dir, "ckpt")
+        step = latest_step(ckpt_dir)
+        template = self.init_state()
+        if step is None:
+            return 0, template
+        step, state = restore_checkpoint(ckpt_dir, template, step, placer)
+        return step, state
+
+    def run(
+        self,
+        n_steps: int,
+        *,
+        failure_at: int | None = None,
+        placer: Callable | None = None,
+        on_metrics: Callable[[int, dict], None] | None = None,
+    ) -> tuple[Any, list[dict]]:
+        start, state = self.resume_or_init(placer)
+        history: list[dict] = []
+        for step in range(start, n_steps):
+            t0 = time.time()
+            state, metrics = self.step_fn(state, step)
+            dt = time.time() - t0
+            flagged = self.straggler.record(step, dt)
+            metrics = {**metrics, "step": step, "dt": dt, "straggler": flagged}
+            history.append(metrics)
+            if on_metrics:
+                on_metrics(step, metrics)
+            self.heartbeat.beat()
+            done = step + 1
+            if done % self.ckpt_every == 0 or done == n_steps:
+                self.mgr.save(done, state, extra={"metrics": {
+                    k: float(v) for k, v in metrics.items() if isinstance(v, (int, float))
+                }})
+            if failure_at is not None and done == failure_at:
+                self.mgr.wait()
+                raise InjectedFailure(f"injected crash after step {failure_at}")
+        self.mgr.wait()
+        return state, history

@@ -1,0 +1,91 @@
+"""jit'd public wrappers around the cam_match Pallas kernel.
+
+Handles the padding contract so callers can pass ragged real-world shapes:
+  * batch  -> multiple of b_blk          (pad queries with zeros)
+  * rows   -> multiple of r_blk          (pad with never-match ranges)
+  * feats  -> multiple of F_CHUNK lanes  (pad with always-match ranges)
+  * chans  -> multiple of 8              (pad leaf channels with zeros)
+and strips the padding from the output.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cam_match import F_CHUNK, cam_match_pallas
+from repro.kernels.ref import cam_match_ref
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return int(np.ceil(x / m)) * m
+
+
+def pad_tables(
+    low: np.ndarray,
+    high: np.ndarray,
+    leaf_matrix: np.ndarray,
+    *,
+    r_blk: int = 256,
+    c_mult: int = 8,
+    n_bins: int | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad the compiled CAM table to kernel-friendly shapes (host-side)."""
+    R, F = low.shape
+    C = leaf_matrix.shape[1]
+    R_pad, F_pad, C_pad = _ceil_to(R, r_blk), _ceil_to(F, F_CHUNK), _ceil_to(C, c_mult)
+    big = np.int32(n_bins if n_bins is not None else (int(high.max()) + 1))
+
+    lo = np.zeros((R_pad, F_pad), dtype=np.int32)
+    hi = np.full((R_pad, F_pad), big, dtype=np.int32)  # always-match columns
+    lo[:R, :F] = low
+    hi[:R, :F] = high
+    lo[R:, :] = 1  # never-match rows: low=1 > high=0
+    hi[R:, :] = 0
+
+    lm = np.zeros((R_pad, C_pad), dtype=np.float32)
+    lm[:R, :C] = leaf_matrix
+    return lo, hi, lm
+
+
+def pad_queries(q: np.ndarray | jnp.ndarray, f_pad: int, b_blk: int = 128) -> jnp.ndarray:
+    B, F = q.shape
+    B_pad = _ceil_to(B, b_blk)
+    out = jnp.zeros((B_pad, f_pad), dtype=jnp.int32)
+    return out.at[:B, :F].set(q.astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b_blk", "r_blk", "mode", "interpret", "out_b", "out_c")
+)
+def cam_match(
+    q_padded: jnp.ndarray,
+    low: jnp.ndarray,
+    high: jnp.ndarray,
+    leaf: jnp.ndarray,
+    *,
+    out_b: int,
+    out_c: int,
+    b_blk: int = 128,
+    r_blk: int = 256,
+    mode: str = "direct",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Kernel entry on pre-padded operands; returns unpadded (out_b, out_c)."""
+    out = cam_match_pallas(
+        q_padded, low, high, leaf,
+        b_blk=b_blk, r_blk=r_blk, mode=mode, interpret=interpret,
+    )
+    return out[:out_b, :out_c]
+
+
+@jax.jit
+def cam_match_jnp(
+    q: jnp.ndarray, low: jnp.ndarray, high: jnp.ndarray, leaf_matrix: jnp.ndarray
+) -> jnp.ndarray:
+    """XLA-fused fallback (no Pallas) — used by the distributed engine where
+    the row axis is mesh-sharded and by CPU-only paths."""
+    return cam_match_ref(q, low, high, leaf_matrix, mode="direct")

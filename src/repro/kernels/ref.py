@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the cam_match kernel.
+
+Semantics (the whole X-TIME datapath between DAC and router, §III-A):
+
+    match[b, r] = AND_f ( low[r, f] <= q[b, f] < high[r, f] )
+    out[b, c]   = SUM_r match[b, r] * leaf_matrix[r, c]
+
+Exactly one row per tree matches any query (the leaves of a tree partition
+feature space), so the masked sum over a tree's rows equals that tree's
+leaf lookup; summing over all rows is the in-core ACC + NoC reduction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import precision
+
+
+def cam_match_ref(
+    q: jnp.ndarray,  # (B, F) integer bins
+    low: jnp.ndarray,  # (R, F) inclusive lower bin bounds
+    high: jnp.ndarray,  # (R, F) exclusive upper bin bounds
+    leaf_matrix: jnp.ndarray,  # (R, C) leaf values routed to class channels
+    *,
+    mode: str = "direct",  # 'direct' | 'msb_lsb' | 'two_cycle'
+) -> jnp.ndarray:
+    """Returns (B, C) accumulated logits/votes."""
+    qe = q[:, None, :].astype(jnp.int32)  # (B, 1, F)
+    lo = low[None, :, :].astype(jnp.int32)  # (1, R, F)
+    hi = high[None, :, :].astype(jnp.int32)
+    if mode == "direct":
+        cell = precision.match_direct(qe, lo, hi)
+    elif mode == "inclusive":
+        cell = precision.match_inclusive(
+            q[:, None, :], low[None, :, :], high[None, :, :]
+        )
+    elif mode == "msb_lsb":
+        cell = precision.match_msb_lsb(qe, lo, hi)
+    elif mode == "two_cycle":
+        cell = precision.match_two_cycle(qe, lo, hi)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    match = jnp.all(cell, axis=-1)  # (B, R) — the MAL wired-AND over columns
+    return match.astype(leaf_matrix.dtype) @ leaf_matrix  # (B, C)
+
+
+def cam_match_bits_ref(
+    q: jnp.ndarray, low: jnp.ndarray, high: jnp.ndarray, *, mode: str = "direct"
+) -> jnp.ndarray:
+    """(B, R) boolean match lines only (for MMR / debug paths)."""
+    qe = q[:, None, :].astype(jnp.int32)
+    lo = low[None, :, :].astype(jnp.int32)
+    hi = high[None, :, :].astype(jnp.int32)
+    fn = {
+        "direct": precision.match_direct,
+        "msb_lsb": precision.match_msb_lsb,
+        "two_cycle": precision.match_two_cycle,
+    }[mode]
+    return jnp.all(fn(qe, lo, hi), axis=-1)

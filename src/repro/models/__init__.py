@@ -1,0 +1,9 @@
+"""LM substrate: model definitions for the assigned architectures.
+
+Everything is plain JAX — params are pytrees of jnp arrays, layers are
+pure functions, layer stacks run under ``jax.lax.scan`` (bounded HLO for
+61-layer 512-device dry-runs), and sharding is applied via PartitionSpec
+rules in ``repro.sharding``.
+"""
+
+from repro.models.registry import build_model  # noqa: F401

@@ -1,0 +1,280 @@
+"""Attention: GQA/MQA with RoPE, sliding windows, flash-style chunking.
+
+Three code paths, all pure JAX:
+
+  * ``flash_attention`` — train/prefill.  Python-unrolled query blocks ×
+    ``lax.scan`` over the causal KV prefix with online softmax, so (a)
+    compiled FLOPs match the causal model FLOPs (no wasted upper-triangle
+    work — this matters for the roofline's useful-FLOP ratio), and (b) the
+    working set per step is (B, H, blk, blk) instead of (B, H, S, S),
+    which is what makes prefill_32k compile inside v5e HBM.
+  * ``decode_attention`` — single new token vs a (possibly sequence-
+    sharded) KV cache.  Softmax statistics reduce over the sharded axis
+    via XLA's automatic collectives (baseline) — the shard_map
+    flash-decode merge is a §Perf variant in launch/serve.py.
+  * ``full_attention`` — reference/smoke path for short sequences.
+
+``window`` and ``rope theta`` may be *traced* per-layer scalars so that
+heterogeneous stacks (gemma3 5:1 local:global) still run under one
+``lax.scan`` over layers.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray  # (d, H*D)
+    wk: jnp.ndarray  # (d, KV*D)
+    wv: jnp.ndarray  # (d, KV*D)
+    wo: jnp.ndarray  # (H*D, d)
+    q_norm: jnp.ndarray | None  # (D,) rms scales (qk_norm)
+    k_norm: jnp.ndarray | None
+
+
+def init_attn_params(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                     dtype, qk_norm: bool = False) -> AttnParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return AttnParams(
+        wq=common.dense_init(k1, (d_model, n_heads * head_dim), dtype),
+        wk=common.dense_init(k2, (d_model, n_kv * head_dim), dtype),
+        wv=common.dense_init(k3, (d_model, n_kv * head_dim), dtype),
+        wo=common.dense_init(k4, (n_heads * head_dim, d_model), dtype),
+        q_norm=jnp.zeros((head_dim,), dtype) if qk_norm else None,
+        k_norm=jnp.zeros((head_dim,), dtype) if qk_norm else None,
+    )
+
+
+def _split_heads(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _gqa_expand(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """(B, S, H, D) -> (B, S, KV, G, D) where G = H // KV."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+# ---------------------------------------------------------------------------
+# Full attention (short sequences / smoke)
+# ---------------------------------------------------------------------------
+
+
+def full_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, KV, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window=0,
+    q_offset: int = 0,
+    logit_softcap: float = 0.0,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]  # may differ from d (MLA)
+    n_kv = k.shape[2]
+    qq = _gqa_expand(q, n_kv) * (d ** -0.5)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qq.astype(jnp.float32), k.astype(jnp.float32))
+    scores = common.softcap(scores, logit_softcap)
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    mask &= kj > qi - jnp.where(window > 0, window, jnp.int32(2**30))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, S, KV, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window=0,
+    logit_softcap: float = 0.0,
+    blk: int = 512,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]  # may differ from sq (cross-attention)
+    dv = v.shape[-1]  # may differ from d (MLA)
+    n_kv = k.shape[2]
+    if causal and sq != sk:
+        raise ValueError(f"causal flash requires sq == sk, got {sq} vs {sk}")
+    if sq <= blk or sq % blk or sk % blk:
+        return full_attention(
+            q, k, v, causal=causal, window=window, logit_softcap=logit_softcap
+        )
+    n_blocks = sq // blk
+    n_kv_blocks = sk // blk
+    g = h // n_kv
+    scale = d ** -0.5
+    window_eff = jnp.where(window > 0, window, jnp.int32(2**30))
+
+    # (nb, B, blk, KV, G, D) query blocks, fp32 math inside
+    qb = _gqa_expand(q, n_kv).reshape(b, n_blocks, blk, n_kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(b, n_kv_blocks, blk, n_kv, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_kv_blocks, blk, n_kv, dv).transpose(1, 0, 2, 3, 4)
+
+    outs = []
+    for i in range(n_blocks):
+        qi = (qb[i] * scale).astype(jnp.float32)  # (B, blk, KV, G, D)
+        q_pos = i * blk + jnp.arange(blk)
+
+        n_kv_chunks = (i + 1) if causal else n_kv_blocks
+        kv_k = kb[:n_kv_chunks]  # (nc, B, blk, KV, D)
+        kv_v = vb[:n_kv_chunks]
+        chunk_ids = jnp.arange(n_kv_chunks)
+
+        def step(carry, xs):
+            m, l, acc = carry
+            kc, vc, cid = xs  # (B, blk, KV, D), (B, blk, KV, D), ()
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", qi, kc.astype(jnp.float32))
+            sc = common.softcap(sc, logit_softcap)
+            k_pos = cid * blk + jnp.arange(blk)
+            mask = jnp.ones((blk, blk), dtype=bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            mask &= k_pos[None, :] > q_pos[:, None] - window_eff
+            sc = jnp.where(mask[None, None, None], sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, n_kv, g, blk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, blk), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, blk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kv_k, kv_v, chunk_ids))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, blk, Dv)
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(b, blk, h, dv))
+
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, D)
+    k_cache: jnp.ndarray,  # (B, S, KV, D)
+    v_cache: jnp.ndarray,
+    pos,  # () current position (number of valid cache entries - 1)
+    *,
+    window=0,
+    logit_softcap: float = 0.0,
+) -> jnp.ndarray:
+    b, _, h, d = q.shape
+    n_kv = k_cache.shape[2]
+    qq = _gqa_expand(q, n_kv)[:, 0] * (d ** -0.5)  # (B, KV, G, D)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qq.astype(jnp.float32), k_cache.astype(jnp.float32)
+    )
+    scores = common.softcap(scores, logit_softcap)
+    kj = jnp.arange(k_cache.shape[1])
+    mask = kj <= pos
+    mask &= kj > pos - jnp.where(window > 0, window, jnp.int32(2**30))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-level forward (projection + rope + attend + out-proj)
+# ---------------------------------------------------------------------------
+
+
+def attention_forward(
+    p: AttnParams,
+    x: jnp.ndarray,  # (B, S, d)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta,
+    positions: jnp.ndarray,  # (B, S) or (S,)
+    causal: bool = True,
+    window=0,
+    logit_softcap: float = 0.0,
+    norm_eps: float = 1e-6,
+    flash_blk: int = 512,
+    kv_override: tuple[jnp.ndarray, jnp.ndarray] | None = None,  # cross-attn
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Returns (output (B,S,d), (k, v) for cache)."""
+    q = _split_heads(x @ p.wq, n_heads)
+    if kv_override is None:
+        k = _split_heads(x @ p.wk, n_kv)
+        v = _split_heads(x @ p.wv, n_kv)
+    else:
+        k, v = kv_override
+    if p.q_norm is not None:
+        q = common.rms_norm(q, p.q_norm, norm_eps)
+        k = common.rms_norm(k, p.k_norm, norm_eps) if kv_override is None else k
+    if rope_theta is not None:
+        if positions.ndim == 1:
+            positions = positions[None, :]
+        q = common.apply_rope(q, positions, rope_theta)
+        if kv_override is None:
+            k = common.apply_rope(k, positions, rope_theta)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, logit_softcap=logit_softcap, blk=flash_blk
+    )
+    return out.reshape(*x.shape[:2], -1) @ p.wo, (k, v)
+
+
+def attention_decode(
+    p: AttnParams,
+    x: jnp.ndarray,  # (B, 1, d)
+    k_cache: jnp.ndarray,  # (B, S, KV, D)
+    v_cache: jnp.ndarray,
+    pos,  # () int32 write/read position
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta,
+    window=0,
+    logit_softcap: float = 0.0,
+    norm_eps: float = 1e-6,
+    update_cache: bool = True,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    q = _split_heads(x @ p.wq, n_heads)
+    if update_cache:
+        k_new = _split_heads(x @ p.wk, n_kv)
+        v_new = _split_heads(x @ p.wv, n_kv)
+        if p.q_norm is not None:
+            k_new = common.rms_norm(k_new, p.k_norm, norm_eps)
+        if rope_theta is not None:
+            k_new = common.apply_rope(k_new, jnp.full((1, 1), pos), rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, 1)
+    if p.q_norm is not None:
+        q = common.rms_norm(q, p.q_norm, norm_eps)
+    if rope_theta is not None:
+        q = common.apply_rope(q, jnp.full((1, 1), pos), rope_theta)
+    out = decode_attention(
+        q, k_cache, v_cache, pos, window=window, logit_softcap=logit_softcap
+    )
+    return out.reshape(x.shape[0], 1, -1) @ p.wo, (k_cache, v_cache)

@@ -1,0 +1,72 @@
+"""Optimized decode paths.
+
+``flash_decode_shardmap``: explicit partial-softmax merge for a KV cache
+sharded along the *sequence* axis of the mesh `model` dimension — the
+layout the partitioner picks when KV heads cannot be sharded (granite /
+gemma3 have kv=1).  Each shard attends over its local cache slice and the
+shards combine with the numerically-exact flash merge:
+
+    m_g   = pmax(m_loc)
+    out_g = psum(exp(m_loc - m_g) * num_loc) / psum(exp(m_loc - m_g) * den_loc)
+
+vs the baseline pjit path where XLA inserts generic softmax collectives.
+One all-reduce of (B, H, D)+(B, H)+(B, H) per layer instead of
+full-score-width reductions — the decode collective term drops from
+O(S/shards) to O(1) bytes in the cache length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def flash_decode_shardmap(
+    mesh: Mesh,
+    q: jnp.ndarray,  # (B, 1, H, D) — replicated over `model`
+    k_cache: jnp.ndarray,  # (B, S, KV, D) — S sharded over `model`
+    v_cache: jnp.ndarray,
+    pos,  # () int32, number of valid positions - 1
+    *,
+    axis: str = "model",
+) -> jnp.ndarray:
+    """Exact decode attention with per-shard partial softmax."""
+    b, _, h, d = q.shape
+    n_kv = k_cache.shape[2]
+    g = h // n_kv
+    s_total = k_cache.shape[1]
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    s_loc = s_total // n_shards
+
+    def local(qb, kb, vb, pos_):
+        # qb: (B,1,H,D) full; kb/vb: (B, S_loc, KV, D) local slice
+        idx = jax.lax.axis_index(axis)
+        base = idx * s_loc
+        qq = qb.reshape(b, n_kv, g, d).astype(jnp.float32) * (d ** -0.5)
+        scores = jnp.einsum("bkgd,bskd->bkgs", qq, kb.astype(jnp.float32))
+        mask = (jnp.arange(s_loc) + base) <= pos_
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        m_loc = scores.max(axis=-1)  # (B, KV, G)
+        p = jnp.exp(scores - m_loc[..., None])
+        num = jnp.einsum("bkgs,bskd->bkgd", p, vb.astype(jnp.float32))
+        den = p.sum(axis=-1)  # (B, KV, G)
+        # exact flash merge across shards
+        m_g = jax.lax.pmax(m_loc, axis)
+        scale = jnp.exp(m_loc - m_g)
+        num_g = jax.lax.psum(num * scale[..., None], axis)
+        den_g = jax.lax.psum(den * scale, axis)
+        out = num_g / jnp.maximum(den_g, 1e-30)[..., None]
+        return out.reshape(b, 1, h, d).astype(qb.dtype)
+
+    fn = shard_map(
+        functools.partial(local),
+        mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn(q, k_cache, v_cache, jnp.asarray(pos, jnp.int32))

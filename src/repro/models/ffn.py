@@ -1,0 +1,54 @@
+"""Gated feed-forward (SwiGLU / GeGLU) blocks."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class FFNParams(NamedTuple):
+    w_gate: jnp.ndarray  # (d, f)
+    w_up: jnp.ndarray  # (d, f)
+    w_down: jnp.ndarray  # (f, d)
+
+
+def init_ffn_params(key, d_model: int, d_ff: int, dtype) -> FFNParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return FFNParams(
+        w_gate=common.dense_init(k1, (d_model, d_ff), dtype),
+        w_up=common.dense_init(k2, (d_model, d_ff), dtype),
+        w_down=common.dense_init(k3, (d_ff, d_model), dtype),
+    )
+
+
+def ffn_forward(p: FFNParams, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    a = common.act_fn(act)
+    return (a(x @ p.w_gate) * (x @ p.w_up)) @ p.w_down
+
+
+class MLPParams(NamedTuple):
+    """Ungated two-matrix MLP (whisper-style fc1/fc2)."""
+
+    w1: jnp.ndarray  # (d, f)
+    b1: jnp.ndarray  # (f,)
+    w2: jnp.ndarray  # (f, d)
+    b2: jnp.ndarray  # (d,)
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, dtype) -> MLPParams:
+    k1, k2 = jax.random.split(key)
+    return MLPParams(
+        w1=common.dense_init(k1, (d_model, d_ff), dtype),
+        b1=jnp.zeros((d_ff,), dtype),
+        w2=common.dense_init(k2, (d_ff, d_model), dtype),
+        b2=jnp.zeros((d_model,), dtype),
+    )
+
+
+def mlp_forward(p: MLPParams, x: jnp.ndarray, act: str = "gelu") -> jnp.ndarray:
+    a = common.act_fn(act)
+    return a(x @ p.w1 + p.b1) @ p.w2 + p.b2

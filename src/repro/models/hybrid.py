@@ -1,0 +1,173 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with a *shared* attention block
+applied every ``cfg.shared_attn_period`` layers (arXiv:2411.15242).
+
+Simplifications vs the HF checkpoint (noted in DESIGN.md): the shared
+block reuses one full parameter set (the original adds per-invocation LoRA
+deltas and concatenates the initial embeddings into its input); rotary
+positions are used in the shared block.
+
+Execution: outer ``lax.scan`` over groups (period mamba layers + one
+shared-attn application), inner ``lax.scan`` over the mamba layers of the
+group — params are stacked (G, P, ...) so HLO stays one group body.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common
+from repro.models.attention import attention_decode, attention_forward, init_attn_params
+from repro.models.ffn import ffn_forward, init_ffn_params
+from repro.models.mamba2 import (
+    dims as mamba_dims,
+    init_mamba2_params,
+    mamba2_decode,
+    mamba2_forward,
+)
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig, flash_blk: int = 512):
+        assert cfg.shared_attn_period > 0
+        assert cfg.n_layers % cfg.shared_attn_period == 0
+        self.cfg = cfg
+        self.flash_blk = flash_blk
+        self.n_groups = cfg.n_layers // cfg.shared_attn_period
+        self.period = cfg.shared_attn_period
+        self.shard_x = lambda t: t  # activation sharding hook (launcher-set)
+
+    def init_params(self, key):
+        cfg = self.cfg
+        dtype = common.dtype_of(cfg.dtype)
+        k_embed, k_mamba, k_attn, k_ffn, k_head = jax.random.split(key, 5)
+        mamba_keys = jax.random.split(k_mamba, (self.n_groups, self.period))
+        params = {
+            "embed": common.embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            "lm_head": common.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype),
+            "mamba": jax.vmap(
+                jax.vmap(lambda k: init_mamba2_params(k, cfg, dtype))
+            )(mamba_keys),
+            "mamba_ln": jnp.zeros((self.n_groups, self.period, cfg.d_model), dtype),
+            # shared transformer block (one param set, applied n_groups times)
+            "shared": {
+                "ln1": jnp.zeros((cfg.d_model,), dtype),
+                "attn": init_attn_params(
+                    k_attn, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim, dtype,
+                ),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "ffn": init_ffn_params(k_ffn, cfg.d_model, cfg.d_ff, dtype),
+            },
+        }
+        return params
+
+    # -- full sequence -------------------------------------------------------
+
+    def _shared_block(self, shared, x, positions):
+        cfg = self.cfg
+        h, kv = attention_forward(
+            shared["attn"], common.rms_norm(x, shared["ln1"], cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta, positions=positions, causal=True, window=0,
+            norm_eps=cfg.norm_eps, flash_blk=self.flash_blk,
+        )
+        x = x + h
+        x = x + ffn_forward(shared["ffn"], common.rms_norm(x, shared["ln2"], cfg.norm_eps))
+        return x, kv
+
+    def hidden_states(self, params, x, positions, collect_cache: bool = False):
+        cfg = self.cfg
+        shared = params["shared"]
+
+        def group_body(h, xs):
+            mparams, mlns = xs
+
+            def mamba_body(hh, mxs):
+                prm, ln = mxs
+                out, state, tail = mamba2_forward(
+                    prm, common.rms_norm(hh, ln, cfg.norm_eps), cfg
+                )
+                return hh + out, (state, tail) if collect_cache else None
+
+            mamba_body_fn = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+            h, states = jax.lax.scan(mamba_body_fn, h, (mparams, mlns))
+            h, kv = self._shared_block(shared, h, positions)
+            out = (states, kv) if collect_cache else None
+            return self.shard_x(h), out
+
+        x = self.shard_x(x)
+        x, caches = jax.lax.scan(group_body, x, (params["mamba"], params["mamba_ln"]))
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, caches
+
+    def loss_fn(self, params, batch):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        positions = jnp.arange(x.shape[1])
+        hidden, _ = self.hidden_states(params, x, positions)
+        from repro.models.transformer import _chunked_ce
+
+        loss = _chunked_ce(hidden, params["lm_head"], batch["labels"])
+        return loss, {"ce": loss, "loss": loss}
+
+    # -- serving ---------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq: int):
+        cfg = self.cfg
+        dtype = common.dtype_of(cfg.dtype)
+        di, h, conv_dim = mamba_dims(cfg)
+        g, p = self.n_groups, self.period
+        return {
+            "ssm": jnp.zeros((g, p, batch, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((g, p, batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+            "k": jnp.zeros((g, batch, seq, cfg.n_kv_heads, cfg.resolved_head_dim), dtype),
+            "v": jnp.zeros((g, batch, seq, cfg.n_kv_heads, cfg.resolved_head_dim), dtype),
+        }
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        positions = jnp.arange(x.shape[1])
+        hidden, caches = self.hidden_states(params, x, positions, collect_cache=True)
+        (states, tails), kv = caches  # (G,P,B,H,Pd,N), (G,P,B,W-1,C); ((G,B,S,KV,D) x2)
+        logits = hidden[:, -1, :] @ params["lm_head"]
+        cache = {"ssm": states, "conv": tails, "k": kv[0], "v": kv[1]}
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        shared = params["shared"]
+        x = jnp.take(params["embed"], token[:, None], axis=0)
+
+        def group_body(h, xs):
+            mparams, mlns, ssm, conv, kc, vc = xs
+
+            def mamba_body(hh, mxs):
+                prm, ln, s1, c1 = mxs
+                out, s2, c2 = mamba2_decode(
+                    prm, common.rms_norm(hh, ln, cfg.norm_eps), s1, c1, cfg
+                )
+                return hh + out, (s2, c2)
+
+            h, (ssm2, conv2) = jax.lax.scan(mamba_body, h, (mparams, mlns, ssm, conv))
+            a, (kc2, vc2) = attention_decode(
+                shared["attn"], common.rms_norm(h, shared["ln1"], cfg.norm_eps),
+                kc, vc, pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                norm_eps=cfg.norm_eps,
+            )
+            h = h + a
+            h = h + ffn_forward(shared["ffn"], common.rms_norm(h, shared["ln2"], cfg.norm_eps))
+            return h, (ssm2, conv2, kc2, vc2)
+
+        x, (ssm, conv, k, v) = jax.lax.scan(
+            group_body, x,
+            (params["mamba"], params["mamba_ln"], cache["ssm"], cache["conv"],
+             cache["k"], cache["v"]),
+        )
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, 0, :] @ params["lm_head"]
+        return logits.astype(jnp.float32), {"ssm": ssm, "conv": conv, "k": k, "v": v}

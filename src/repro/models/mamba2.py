@@ -1,0 +1,197 @@
+"""Mamba-2 (SSD) block — chunked parallel scan for train/prefill, O(1)
+recurrent state for decode (the reason zamba2 runs the long_500k cell).
+
+Implementation follows the SSD minimal formulation (Dao & Gu 2024,
+arXiv:2405.21060, Listing 1), with the chunk loop expressed as a
+``lax.scan`` carrying the inter-chunk state so the (Q x Q) intra-chunk
+decay matrix is the only quadratic-in-chunk temp (Q = cfg.ssm_chunk).
+
+Single group (n_groups=1): B and C are shared across heads.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class Mamba2Params(NamedTuple):
+    in_proj: jnp.ndarray  # (d, 2*di + 2*N + H)
+    conv_w: jnp.ndarray  # (W, conv_dim) depthwise causal conv
+    conv_b: jnp.ndarray  # (conv_dim,)
+    a_log: jnp.ndarray  # (H,)
+    d_skip: jnp.ndarray  # (H,)
+    dt_bias: jnp.ndarray  # (H,)
+    norm: jnp.ndarray  # (di,) gated RMSNorm scale
+    out_proj: jnp.ndarray  # (di, d)
+
+
+def dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    heads = di // cfg.ssm_head_dim
+    conv_dim = di + 2 * cfg.ssm_state
+    return di, heads, conv_dim
+
+
+def init_mamba2_params(key, cfg, dtype) -> Mamba2Params:
+    di, h, conv_dim = dims(cfg)
+    ks = jax.random.split(key, 4)
+    return Mamba2Params(
+        in_proj=common.dense_init(ks[0], (cfg.d_model, 2 * di + 2 * cfg.ssm_state + h), dtype),
+        conv_w=common.dense_init(ks[1], (cfg.ssm_conv_width, conv_dim), dtype),
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        a_log=jnp.log(
+            jax.random.uniform(ks[2], (h,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        d_skip=jnp.ones((h,), jnp.float32),
+        dt_bias=jnp.log(
+            jnp.exp(
+                jax.random.uniform(ks[3], (h,), jnp.float32, minval=1e-3, maxval=0.1)
+            )
+            - 1.0
+        ),  # inverse softplus of U(1e-3, 0.1)
+        norm=jnp.zeros((di,), dtype),
+        out_proj=common.dense_init(jax.random.fold_in(key, 7), (di, cfg.d_model), dtype),
+    )
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via explicit shifts (width is small).
+
+    x: (B, S, C), w: (W, C) -> (B, S, C).
+    """
+    wsize = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, wsize):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def _ssd_chunked(
+    xh: jnp.ndarray,  # (B, S, H, P) inputs (already dt-scaled NOT applied)
+    dt: jnp.ndarray,  # (B, S, H) softplus'd step sizes
+    a: jnp.ndarray,  # (H,) negative decay rates (A = -exp(a_log))
+    bmat: jnp.ndarray,  # (B, S, N)
+    cmat: jnp.ndarray,  # (B, S, N)
+    chunk: int,
+    h0: jnp.ndarray | None = None,  # (B, H, P, N) initial state
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    if s % chunk:  # fall back to the largest divisor (exactness over speed)
+        chunk = next(c for c in range(min(chunk, s), 0, -1) if s % c == 0)
+    nc = s // chunk
+    q = chunk
+
+    xc = xh.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    ac = dtc * a[None, None, None, :]  # (B, nc, Q, H) log-decay increments
+
+    # move chunk axis first for scan
+    xc, dtc, bc, cc, ac = (t.transpose(1, 0, *range(2, t.ndim)) for t in (xc, dtc, bc, cc, ac))
+
+    state0 = (
+        jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+
+    def per_chunk(state, xs):
+        xq, dq, bq, cq, aq = xs  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N), (B,Q,H)
+        cs = jnp.cumsum(aq, axis=1)  # (B,Q,H) running log-decay
+        total = cs[:, -1]  # (B,H)
+
+        # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j (per head)
+        li = cs[:, :, None, :] - cs[:, None, :, :]  # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("bqn,bjn->bqj", cq, bq)  # (B,Q,Q) shared across heads
+        y_diag = jnp.einsum("bqj,bqjh,bjh,bjhp->bqhp", cb, L, dq, xq)
+
+        # inter-chunk contribution from the carried state
+        decay_in = jnp.exp(cs)  # (B,Q,H)
+        y_off = jnp.einsum("bqn,bhpn,bqh->bqhp", cq, state, decay_in)
+
+        # end-of-chunk state
+        decay_out = jnp.exp(total[:, None, :] - cs)  # (B,Q,H)
+        state_new = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bqn,bqh,bqhp->bhpn", bq, decay_out * dq, xq
+        )
+        return state_new, y_diag + y_off
+
+    state, ys = jax.lax.scan(per_chunk, state0, (xc, dtc, bc, cc, ac))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, state
+
+
+def mamba2_forward(
+    prm: Mamba2Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    h0: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.
+
+    Returns (out (B,S,d), final ssm state (B,H,P,N), conv tail
+    (B, W-1, conv_dim)) — the latter two seed the decode cache.
+    """
+    di, h, conv_dim = dims(cfg)
+    n = cfg.ssm_state
+    b, s, _ = x.shape
+
+    zxbcdt = x @ prm.in_proj  # (B, S, 2di + 2N + H)
+    z, xbc_raw, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, prm.conv_w, prm.conv_b))
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    xh = xin.reshape(b, s, h, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + prm.dt_bias)  # (B,S,H)
+    a = -jnp.exp(prm.a_log)  # (H,)
+
+    y, state = _ssd_chunked(xh, dt, a, bmat, cmat, cfg.ssm_chunk, h0)
+    y = y + xh.astype(jnp.float32) * prm.d_skip[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), prm.norm, cfg.norm_eps)
+    conv_tail = xbc_raw[:, -(cfg.ssm_conv_width - 1):, :]
+    return y @ prm.out_proj, state, conv_tail
+
+
+def mamba2_decode(
+    prm: Mamba2Params,
+    x: jnp.ndarray,  # (B, 1, d)
+    ssm_state: jnp.ndarray,  # (B, H, P, N)
+    conv_state: jnp.ndarray,  # (B, W-1, conv_dim)
+    cfg,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent step.  Returns (out, ssm_state, conv_state)."""
+    di, h, conv_dim = dims(cfg)
+    n = cfg.ssm_state
+    b = x.shape[0]
+    p = cfg.ssm_head_dim
+
+    zxbcdt = x[:, 0] @ prm.in_proj  # (B, 2di+2N+H)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+
+    # conv over (conv_state ++ xbc)
+    hist = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B, W, C)
+    xbc_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, prm.conv_w) + prm.conv_b)
+    conv_state = hist[:, 1:]
+
+    xin, bvec, cvec = jnp.split(xbc_c, [di, di + n], axis=-1)
+    xh = xin.reshape(b, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + prm.dt_bias)  # (B,H)
+    decay = jnp.exp(dt * (-jnp.exp(prm.a_log))[None, :])  # (B,H)
+
+    ssm_state = ssm_state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bvec.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, cvec.astype(jnp.float32))
+    y = y + xh * prm.d_skip[None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), prm.norm, cfg.norm_eps)
+    return (y @ prm.out_proj)[:, None, :], ssm_state, conv_state

@@ -1,0 +1,143 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill use the naive (decompressed) path; decode uses the
+weight-absorbed path with a compressed cache of (kv_lora + qk_rope) floats
+per token — the property that makes deepseek-v3 decode memory-light.
+
+Shapes (deepseek-v3): d=7168, q_lora=1536, kv_lora=512, qk_nope=128,
+qk_rope=64, v_head=128, H=128.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.attention import flash_attention
+
+
+class MLAParams(NamedTuple):
+    wdq: jnp.ndarray  # (d, q_lora)
+    q_ln: jnp.ndarray  # (q_lora,)
+    wuq: jnp.ndarray  # (q_lora, H*(nope+rope))
+    wdkv: jnp.ndarray  # (d, kv_lora)
+    kv_ln: jnp.ndarray  # (kv_lora,)
+    wuk: jnp.ndarray  # (kv_lora, H*nope)
+    wuv: jnp.ndarray  # (kv_lora, H*v_dim)
+    wkr: jnp.ndarray  # (d, rope)
+    wo: jnp.ndarray  # (H*v_dim, d)
+
+
+def init_mla_params(key, cfg, dtype) -> MLAParams:
+    ks = jax.random.split(key, 7)
+    h = cfg.n_heads
+    return MLAParams(
+        wdq=common.dense_init(ks[0], (cfg.d_model, cfg.q_lora_rank), dtype),
+        q_ln=jnp.zeros((cfg.q_lora_rank,), dtype),
+        wuq=common.dense_init(
+            ks[1], (cfg.q_lora_rank, h * (cfg.qk_nope_dim + cfg.qk_rope_dim)), dtype
+        ),
+        wdkv=common.dense_init(ks[2], (cfg.d_model, cfg.kv_lora_rank), dtype),
+        kv_ln=jnp.zeros((cfg.kv_lora_rank,), dtype),
+        wuk=common.dense_init(ks[3], (cfg.kv_lora_rank, h * cfg.qk_nope_dim), dtype),
+        wuv=common.dense_init(ks[4], (cfg.kv_lora_rank, h * cfg.v_head_dim), dtype),
+        wkr=common.dense_init(ks[5], (cfg.d_model, cfg.qk_rope_dim), dtype),
+        wo=common.dense_init(ks[6], (h * cfg.v_head_dim, cfg.d_model), dtype),
+    )
+
+
+def _project_q(p: MLAParams, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = common.rms_norm(x @ p.wdq, p.q_ln, cfg.norm_eps)
+    q = (cq @ p.wuq).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(
+    p: MLAParams,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    positions: jnp.ndarray,  # (S,) or (B, S)
+    *,
+    flash_blk: int = 512,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Naive decompressed MLA for train/prefill.
+
+    Returns (out, (ckv_normed, k_rope)) — the compressed-cache entries.
+    """
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if positions.ndim == 1:
+        positions = positions[None, :]
+
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    ckv = common.rms_norm(x @ p.wdkv, p.kv_ln, cfg.norm_eps)  # (B, S, kv_lora)
+    k_nope = (ckv @ p.wuk).reshape(b, s, h, dn)
+    v = (ckv @ p.wuv).reshape(b, s, h, dv)
+    k_rope = common.apply_rope((x @ p.wkr)[:, :, None, :], positions, cfg.rope_theta)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B, S, H, dn+dr)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    out = flash_attention(q, k, v, causal=True, window=0, blk=flash_blk)
+    out = out.reshape(b, s, h * dv) @ p.wo
+    return out, (ckv, k_rope[:, :, 0, :])
+
+
+def mla_decode(
+    p: MLAParams,
+    x: jnp.ndarray,  # (B, 1, d)
+    ckv_cache: jnp.ndarray,  # (B, S, kv_lora) — rms-normed compressed kv
+    kr_cache: jnp.ndarray,  # (B, S, rope)
+    pos,  # () int32
+    cfg,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Weight-absorbed decode: scores and context live in the latent space.
+
+    score_h(t) = q_nope_h^T Wuk_h ckv_t + q_rope^T kr_t
+    ctx_h      = sum_t p_t ckv_t          (B, H, kv_lora)
+    out        = concat_h(ctx_h Wuv_h) Wo
+    """
+    b = x.shape[0]
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lr = cfg.kv_lora_rank
+    positions = jnp.full((b, 1), pos)
+
+    # update caches with this token's compressed kv
+    ckv_new = common.rms_norm(x @ p.wdkv, p.kv_ln, cfg.norm_eps)  # (B, 1, lr)
+    kr_new = common.apply_rope((x @ p.wkr)[:, :, None, :], positions, cfg.rope_theta)[
+        :, :, 0, :
+    ]
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, ckv_new.astype(ckv_cache.dtype), pos, 1
+    )
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, kr_new.astype(kr_cache.dtype), pos, 1
+    )
+
+    q_nope, q_rope = _project_q(p, x, cfg, positions)  # (B, 1, H, dn/dr)
+    # absorb Wuk into the query: (B, H, lr)
+    wuk = p.wuk.reshape(lr, h, dn)
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+
+    scale = (dn + dr) ** -0.5
+    scores = (
+        jnp.einsum("bhl,bsl->bhs", q_lat, ckv_cache.astype(jnp.float32))
+        + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                     kr_cache.astype(jnp.float32))
+    ) * scale
+    mask = jnp.arange(ckv_cache.shape[1]) <= pos
+    scores = jnp.where(mask[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    ctx = jnp.einsum("bhs,bsl->bhl", probs, ckv_cache.astype(jnp.float32))  # (B,H,lr)
+    wuv = p.wuv.reshape(lr, h, dv)
+    out_h = jnp.einsum("bhl,lhv->bhv", ctx, wuv.astype(jnp.float32))  # (B,H,dv)
+    out = out_h.reshape(b, 1, h * dv).astype(x.dtype) @ p.wo
+    return out, (ckv_cache, kr_cache)

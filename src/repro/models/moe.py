@@ -1,0 +1,179 @@
+"""Mixture-of-Experts FFN with capacity-based cumsum-rank dispatch.
+
+Design (see DESIGN.md §5 and EXPERIMENTS.md §Perf for the measured
+motivation):
+  * top-k softmax routing (+ optional always-on shared experts);
+  * rank-within-expert via an exclusive **cumsum over the one-hot routing
+    matrix** — no global argsort: every intermediate stays in the
+    token-major (T, ...) layout, which keeps GSPMD sharding propagation
+    intact (tokens on `data`(x`pod`)).  The first argsort-based version
+    replicated the (T*k, d) gather on every device — 747 GiB/device on
+    deepseek-v3 train_4k;
+  * dispatch into a dense (E, C, d) buffer with capacity
+    C = ceil(T*k/E * capacity_factor); tokens beyond capacity are dropped
+    (GShard semantics) via out-of-bounds scatter drop.  The scatter from
+    token-sharded source to expert-sharded buffer is the EP all-to-all;
+  * expert compute is a grouped SwiGLU einsum (E,C,d)x(E,d,f): compiled
+    FLOPs = tokens*topk*cf*6*d*f — the exact MoE model FLOPs (x capacity
+    slack);
+  * combine is a (T, k, d) reshape-sum — token-major order makes the
+    inverse scatter unnecessary.
+
+``set_shard_hooks`` installs with_sharding_constraint callables (token-dim
+and expert-dim layouts) from the launcher; identity when unset (smoke
+tests, single device).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.ffn import FFNParams, ffn_forward, init_ffn_params
+
+# launcher-installed sharding hooks (identity by default)
+_HOOKS: dict[str, Callable] = {
+    "tokens": lambda x: x,
+    "experts": lambda x: x,
+    "weights": lambda x: x,
+    "impl": None,  # optional whole-layer override (moe_shardmap)
+}
+
+
+def set_shard_hooks(tokens: Callable | None, experts: Callable | None,
+                    weights: Callable | None = None) -> None:
+    _HOOKS["tokens"] = tokens or (lambda x: x)
+    _HOOKS["experts"] = experts or (lambda x: x)
+    _HOOKS["weights"] = weights or (lambda x: x)
+
+
+def set_impl(fn: Callable | None) -> None:
+    """Install a drop-in moe_forward override (e.g. the shard_map
+    all-to-all implementation from moe_shardmap.make_shardmap_moe)."""
+    _HOOKS["impl"] = fn
+
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray  # (d, E) fp32 for routing stability
+    w_gate: jnp.ndarray  # (E, d, f)
+    w_up: jnp.ndarray  # (E, d, f)
+    w_down: jnp.ndarray  # (E, f, d)
+    shared: FFNParams | None  # always-on shared expert(s)
+
+
+def init_moe_params(
+    key, d_model: int, d_ff: int, n_experts: int, n_shared: int, dtype
+) -> MoEParams:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    ex = lambda k, shape: common.dense_init(k, shape, dtype, in_axis=1)
+    return MoEParams(
+        router=common.dense_init(k1, (d_model, n_experts), jnp.float32),
+        w_gate=ex(k2, (n_experts, d_model, d_ff)),
+        w_up=ex(k3, (n_experts, d_model, d_ff)),
+        w_down=common.dense_init(k4, (n_experts, d_ff, d_model), in_axis=1, dtype=dtype),
+        shared=(
+            init_ffn_params(k5, d_model, d_ff * n_shared, dtype) if n_shared else None
+        ),
+    )
+
+
+def moe_forward(
+    p: MoEParams,
+    x: jnp.ndarray,  # (B, S, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux load-balance loss scalar)."""
+    if _HOOKS["impl"] is not None:
+        return _HOOKS["impl"](p, x, top_k=top_k, capacity_factor=capacity_factor,
+                              act=act)
+    b, s, d = x.shape
+    e = p.router.shape[1]
+    t = b * s
+    st = _HOOKS["tokens"]
+    se = _HOOKS["experts"]
+    xt = st(x.reshape(t, d))
+
+    logits = st((xt.astype(jnp.float32) @ p.router))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # -- aux loss (Switch-style) --
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (T, k, E)
+    dispatch_frac = onehot.sum(axis=(0, 1)) / (t * top_k)
+    prob_frac = probs.mean(axis=0)
+    aux = e * jnp.sum(dispatch_frac * prob_frac)
+
+    # -- two-level cumsum ranking (token-major; no global sort) --
+    # Level 1: rank within a block of tokens; level 2: cumsum of per-block
+    # expert counts.  A monolithic (T*k, E) cumsum materializes globally
+    # under GSPMD (measured 16 GiB on deepseek train_4k); blocked form
+    # keeps every temp sharded on the block axis (§Perf log).
+    capacity = int(max(1, round(t * top_k / e * capacity_factor)))
+    tk = t * top_k
+    blk = 4096 if tk % 4096 == 0 else next(
+        b for b in (2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1) if tk % b == 0
+    )
+    nb = tk // blk
+    oh_blocks = st(onehot.reshape(nb, blk, e).astype(jnp.int32))
+    local_cum = jnp.cumsum(oh_blocks, axis=1)  # (nb, blk, E) within-block
+    block_counts = local_cum[:, -1, :]  # (nb, E)
+    block_offsets = jnp.cumsum(block_counts, axis=0) - block_counts  # exclusive
+    flat_expert = gate_idx.reshape(tk)
+    rank_local = jnp.take_along_axis(
+        local_cum.reshape(tk, e), flat_expert[:, None], axis=1
+    )[:, 0] - 1
+    offs = jnp.take_along_axis(
+        jnp.repeat(block_offsets, blk, axis=0), flat_expert[:, None], axis=1
+    )[:, 0]
+    rank = rank_local + offs
+    keep = rank < capacity
+    dest = jnp.where(keep, flat_expert * capacity + rank, e * capacity)
+
+    # -- dispatch (token-sharded -> expert-sharded: the EP all-to-all) --
+    # scatter only the narrow token ids, then gather rows: a full-width
+    # (T*k, d) scatter lowers to u32[T*k, d] index broadcasts (280 GiB/dev
+    # measured on deepseek train_4k); the id scatter is (E*C,) int32.
+    flat_token = jnp.arange(tk, dtype=jnp.int32) // top_k
+    buf_tok = (
+        jnp.full((e * capacity,), tk, jnp.int32).at[dest].set(flat_token, mode="drop")
+    )
+    valid = (buf_tok < tk)[:, None]
+    buf = jnp.where(
+        valid, jnp.take(xt, jnp.minimum(buf_tok, t - 1), axis=0), 0
+    ).astype(x.dtype)
+    buf = se(buf.reshape(e, capacity, d))
+
+    # -- grouped expert SwiGLU --
+    # weight-gathered FSDP (§Perf D1): contract over the FULL d/f dims by
+    # un-sharding the expert weights' fsdp axis right before use (EP stays
+    # on `model`).  Contracting over the fsdp-sharded d instead emits
+    # activation-sized partial-sum all-reduces — measured 8.7 TB/device
+    # per step on deepseek-v3 train_4k.
+    sw = _HOOKS["weights"]
+    a = common.act_fn(act)
+    w_gate, w_up, w_down = sw(p.w_gate), sw(p.w_up), sw(p.w_down)
+    h = a(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", buf, w_up
+    )
+    out_buf = se(jnp.einsum("ecf,efd->ecd", h, w_down)).reshape(e * capacity, d)
+
+    # -- combine (expert-sharded -> token-sharded) --
+    gathered = jnp.take(out_buf, jnp.minimum(dest, e * capacity - 1), axis=0)
+    gathered = st(gathered * (gate_vals.reshape(-1) * keep)[:, None].astype(x.dtype))
+    out = gathered.reshape(t, top_k, d).sum(axis=1)  # token-major inverse
+
+    if p.shared is not None:
+        out = out + ffn_forward(p.shared, xt, act)
+    return out.reshape(b, s, d), aux
+
+
+def moe_expert_flops(t: int, d: int, f: int, top_k: int, cf: float) -> float:
+    """Compiled expert GEMM FLOPs for a (B*S = t)-token forward."""
+    return 6.0 * t * top_k * cf * d * f

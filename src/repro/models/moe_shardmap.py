@@ -1,0 +1,168 @@
+"""Explicit shard_map MoE: per-device routing + all_to_all dispatch.
+
+Motivation (EXPERIMENTS.md §Perf D1): under pjit, GSPMD lowers the
+token<->expert cross-shard gathers of `moe.moe_forward` as
+mask + all-reduce of full (T*k, d) tensors — 7.3 TB/device/step on
+deepseek-v3 train_4k.  The communication-optimal form is an all-to-all
+over the `model` (EP) axis of only the dispatched capacity buffers.
+shard_map expresses it directly:
+
+  * tokens are blocked over every mesh axis (batch over data(+pod), seq
+    over model): each device routes its own T_dev tokens locally;
+  * each device builds a (E, C_dev, d) send buffer (local capacity
+    C_dev = ceil(T_dev*k/E * cf) — GShard drop semantics per device);
+  * one `lax.all_to_all` over `model` redistributes buffers so the owner
+    of each expert shard receives its experts' tokens from all peers:
+    bytes/device = 2 * E * C_dev * d — GB-scale, not TB-scale;
+  * expert SwiGLU runs on the local (E_loc, M*C_dev, d) block with the
+    locally-owned weights; the inverse all_to_all returns outputs; the
+    combine is a local gather + (T_dev, k, d) reshape-sum.
+
+Expert weights arrive as P('model', None, None) blocks (EP); router and
+shared-expert weights are replicated — shard_map's transpose inserts the
+correct psum for their gradients.
+
+Capacity-semantics note: dropping is per-device here vs global in the
+pjit path, so outputs are identical whenever nothing drops (verified in
+tests with a generous capacity factor) and differ only in which
+over-capacity tokens drop — both are valid GShard-style policies.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models import common
+from repro.models.ffn import ffn_forward
+from repro.models.moe import MoEParams
+
+
+def _local_moe(
+    xt,  # (T_dev, d) this device's tokens
+    router,  # (d, E) replicated
+    w_gate,  # (E_loc, d, f) this device's experts
+    w_up,
+    w_down,
+    shared,  # FFNParams or None, replicated
+    *,
+    model_axis: str,
+    all_axes: tuple,
+    top_k: int,
+    capacity_factor: float,
+    act: str,
+):
+    t_dev, d = xt.shape
+    e = router.shape[1]
+    e_loc = w_gate.shape[0]
+    m = e // e_loc  # model-axis group size
+
+    logits = xt.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss over ALL tokens: pmean the FRACTIONS over every mesh axis
+    # first, then form the product (product-of-global-means, matching the
+    # pjit path; per-group products would average differently).
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+    dispatch_frac = jax.lax.pmean(
+        onehot.sum(axis=(0, 1)) / (t_dev * top_k), all_axes
+    )
+    prob_frac = jax.lax.pmean(probs.mean(axis=0), all_axes)
+    aux = e * jnp.sum(dispatch_frac * prob_frac)
+
+    # local rank-within-expert (small: T_dev*k x E ints)
+    tk = t_dev * top_k
+    flat_expert = gate_idx.reshape(tk)
+    cum = jnp.cumsum(onehot.reshape(tk, e).astype(jnp.int32), axis=0)
+    rank = jnp.take_along_axis(cum, flat_expert[:, None], axis=1)[:, 0] - 1
+    c_dev = int(max(1, round(t_dev * top_k / e * capacity_factor)))
+    keep = rank < c_dev
+    dest = jnp.where(keep, flat_expert * c_dev + rank, e * c_dev)
+
+    # narrow scatter of token ids -> gather rows (send buffer)
+    flat_token = jnp.arange(tk, dtype=jnp.int32) // top_k
+    buf_tok = (
+        jnp.full((e * c_dev,), tk, jnp.int32).at[dest].set(flat_token, mode="drop")
+    )
+    valid = (buf_tok < tk)[:, None]
+    send = jnp.where(
+        valid, jnp.take(xt, jnp.minimum(buf_tok, t_dev - 1), axis=0), 0
+    ).astype(xt.dtype)
+
+    # dispatch: peer-transpose on axis 0 (symmetric split=concat=0 form —
+    # the asymmetric-axes VJP mis-transposes in current jax)
+    send = send.reshape(m, e_loc, c_dev, d)
+    recv = jax.lax.all_to_all(send, model_axis, split_axis=0, concat_axis=0,
+                              tiled=False)  # recv[j] = peer j's tokens for us
+    recv = recv.transpose(1, 0, 2, 3).reshape(e_loc, m * c_dev, d)
+
+    a = common.act_fn(act)
+    h = a(jnp.einsum("ecd,edf->ecf", recv, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", recv, w_up
+    )
+    out = jnp.einsum("ecf,efd->ecd", h, w_down)  # (E_loc, M*C_dev, d)
+
+    # inverse peer-transpose back to the senders
+    out = out.reshape(e_loc, m, c_dev, d).transpose(1, 0, 2, 3)
+    back = jax.lax.all_to_all(out, model_axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    back = back.reshape(e * c_dev, d)
+
+    gathered = jnp.take(back, jnp.minimum(dest, e * c_dev - 1), axis=0)
+    gathered = gathered * (gate_vals.reshape(-1) * keep)[:, None].astype(xt.dtype)
+    y = gathered.reshape(t_dev, top_k, d).sum(axis=1)
+
+    if shared is not None:
+        y = y + ffn_forward(shared, xt, act)
+    return y, aux
+
+
+def make_shardmap_moe(mesh: Mesh, *, model_axis: str = "model") -> Callable:
+    """Returns moe_forward(p, x, *, top_k, capacity_factor, act) drop-in.
+
+    x must be (B, S, d) with batch over the data axes and seq over
+    `model` — the activation_sharder layout.
+    """
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    bspec = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    def moe_forward(p: MoEParams, x, *, top_k: int, capacity_factor: float = 1.25,
+                    act: str = "silu"):
+        b, s, d = x.shape
+
+        all_axes = (model_axis,) + data_axes
+
+        def block(xb, router, wg, wu, wd, shared):
+            t_dev = xb.shape[0] * xb.shape[1]
+            y, aux = _local_moe(
+                xb.reshape(t_dev, d), router, wg, wu, wd, shared,
+                model_axis=model_axis, all_axes=all_axes, top_k=top_k,
+                capacity_factor=capacity_factor, act=act,
+            )
+            return y.reshape(xb.shape), aux
+
+        fn = shard_map(
+            block,
+            mesh=mesh,
+            in_specs=(
+                P(bspec, model_axis, None),  # x
+                P(None, None),  # router (replicated)
+                P(model_axis, None, None),  # expert weights (EP)
+                P(model_axis, None, None),
+                P(model_axis, None, None),
+                jax.tree.map(lambda _: P(None, None), p.shared),  # replicated
+            ),
+            out_specs=(P(bspec, model_axis, None), P()),
+            check_rep=False,
+        )
+        return fn(x, p.router, p.w_gate, p.w_up, p.w_down, p.shared)
+
+    return moe_forward

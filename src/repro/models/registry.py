@@ -1,0 +1,101 @@
+"""Uniform model bundle: config -> (init, loss, prefill, decode, specs).
+
+``build_model(cfg)`` returns an ``LMBundle`` whose members are what the
+launcher, dry-run, trainer and server consume.  ``input_specs`` yields the
+ShapeDtypeStruct stand-ins for every input of the given shape cell —
+weak-type-correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeCell
+from repro.models import common
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.rwkv_model import RWKVLM
+from repro.models.transformer import TransformerLM
+
+
+@dataclass
+class LMBundle:
+    cfg: ModelConfig
+    model: Any
+    init_params: Callable
+    loss_fn: Callable  # (params, batch) -> (loss, metrics)
+    prefill: Callable  # (params, batch) -> (logits, cache)
+    decode_step: Callable  # (params, cache, token, pos) -> (logits, cache)
+    init_cache: Callable  # (batch, seq) -> cache pytree
+
+    # -- dry-run inputs -------------------------------------------------------
+
+    def params_shape(self):
+        return jax.eval_shape(self.init_params, jax.random.key(0))
+
+    def cache_shape(self, batch: int, seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, seq))
+
+    def input_specs(self, cell: ShapeCell) -> dict:
+        """Shape stand-ins for one (arch x shape) dry-run cell."""
+        cfg = self.cfg
+        b, s = cell.global_batch, cell.seq_len
+        dt = common.dtype_of(cfg.dtype)
+        i32 = jnp.int32
+        if cell.kind == "train":
+            if cfg.is_encoder_decoder:
+                sd = max(64, s // 8)  # decoder tokens per frame window
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((b, sd), i32),
+                    "labels": jax.ShapeDtypeStruct((b, sd), i32),
+                }
+            if cfg.embeddings_input:
+                return {
+                    "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cell.kind == "prefill":
+            if cfg.is_encoder_decoder:
+                sd = max(64, s // 8)
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((b, sd), i32),
+                }
+            if cfg.embeddings_input:
+                return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        # decode: one new token against a seq_len cache
+        return {
+            "cache": self.cache_shape(b, s),
+            "token": jax.ShapeDtypeStruct((b,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+
+def build_model(cfg: ModelConfig, flash_blk: int = 512) -> LMBundle:
+    if cfg.family == "hybrid":
+        m: Any = HybridLM(cfg, flash_blk)
+    elif cfg.family == "ssm":
+        m = RWKVLM(cfg)
+    elif cfg.family == "audio":
+        m = EncDecLM(cfg, flash_blk)
+    else:  # dense | moe | vlm
+        m = TransformerLM(cfg, flash_blk)
+    return LMBundle(
+        cfg=cfg,
+        model=m,
+        init_params=m.init_params,
+        loss_fn=m.loss_fn,
+        prefill=m.prefill,
+        decode_step=m.decode_step,
+        init_cache=m.init_cache,
+    )

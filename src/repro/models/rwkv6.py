@@ -1,0 +1,229 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free linear
+recurrence with data-dependent per-channel decay.
+
+Faithful parts: the WKV6 recurrence S <- diag(w_t) S + k_t v_t^T with
+bonus u, data-dependent decay w_t = exp(-exp(w0 + tanh(m @ A) B)), token
+shift, per-head group norm, squared-ReLU channel mixing.
+Simplification (noted in DESIGN.md): token-shift interpolation uses static
+per-channel mu (RWKV-5 style) instead of the full 5-way ddlerp LoRA; the
+decay — the architecture's signature — keeps its full data-dependent form.
+
+State per layer: (S (B,H,D,D), x_prev_att (B,d), x_prev_ffn (B,d)) — O(1)
+in sequence length, which is why rwkv6 runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class RWKV6Params(NamedTuple):
+    # time mixing
+    mu_r: jnp.ndarray  # (d,)
+    mu_k: jnp.ndarray
+    mu_v: jnp.ndarray
+    mu_g: jnp.ndarray
+    mu_w: jnp.ndarray
+    w0: jnp.ndarray  # (d,) base decay
+    w_lora_a: jnp.ndarray  # (d, 64)
+    w_lora_b: jnp.ndarray  # (64, d)
+    wr: jnp.ndarray  # (d, d)
+    wk: jnp.ndarray
+    wv: jnp.ndarray
+    wg: jnp.ndarray
+    wo: jnp.ndarray
+    u: jnp.ndarray  # (d,) per-channel bonus
+    ln_scale: jnp.ndarray  # (d,) per-head group norm
+    ln_bias: jnp.ndarray
+    # channel mixing
+    mu_ck: jnp.ndarray  # (d,)
+    mu_cr: jnp.ndarray
+    ck: jnp.ndarray  # (d, d_ff)
+    cv: jnp.ndarray  # (d_ff, d)
+    cr: jnp.ndarray  # (d, d)
+
+
+def init_rwkv6_params(key, cfg, dtype) -> RWKV6Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 10)
+    mu = lambda k: jax.random.uniform(k, (d,), jnp.float32)
+    return RWKV6Params(
+        mu_r=mu(ks[0]), mu_k=mu(jax.random.fold_in(ks[0], 1)),
+        mu_v=mu(jax.random.fold_in(ks[0], 2)), mu_g=mu(jax.random.fold_in(ks[0], 3)),
+        mu_w=mu(jax.random.fold_in(ks[0], 4)),
+        w0=jnp.full((d,), -2.0, jnp.float32),
+        w_lora_a=common.dense_init(ks[1], (d, 64), jnp.float32),
+        w_lora_b=jnp.zeros((64, d), jnp.float32),
+        wr=common.dense_init(ks[2], (d, d), dtype),
+        wk=common.dense_init(ks[3], (d, d), dtype),
+        wv=common.dense_init(ks[4], (d, d), dtype),
+        wg=common.dense_init(ks[5], (d, d), dtype),
+        wo=common.dense_init(ks[6], (d, d), dtype),
+        u=jnp.zeros((d,), jnp.float32),
+        ln_scale=jnp.ones((d,), jnp.float32),
+        ln_bias=jnp.zeros((d,), jnp.float32),
+        mu_ck=mu(jax.random.fold_in(ks[0], 5)),
+        mu_cr=mu(jax.random.fold_in(ks[0], 6)),
+        ck=common.dense_init(ks[7], (d, f), dtype),
+        cv=common.dense_init(ks[8], (f, d), dtype),
+        cr=common.dense_init(ks[9], (d, d), dtype),
+    )
+
+
+def _shift(x: jnp.ndarray, x_prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token shift: x_prev feeds position 0 (zeros at sequence start)."""
+    pad = jnp.zeros_like(x[:, :1]) if x_prev is None else x_prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+MAX_LOG_DECAY = 4.0  # per-step |log w| cap: keeps the chunked form's
+# exp(+cum) factors inside fp32 range (chunk 16 x 4.0 = 64 < log(f32max)≈88)
+# while w >= e^-4 ≈ 0.018/step still halves context every ~0.2 tokens at the
+# floor — no expressiveness lost in practice.  The cap is part of the model
+# definition, so the scan and chunked paths are bit-consistent.
+
+
+def _decay(prm: RWKV6Params, mw: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent decay in (0,1): exp(-exp(w0 + tanh(m A) B))."""
+    lora = jnp.tanh(mw.astype(jnp.float32) @ prm.w_lora_a) @ prm.w_lora_b
+    return jnp.exp(-jnp.minimum(jnp.exp(prm.w0 + lora), MAX_LOG_DECAY))
+
+
+def _group_norm(y: jnp.ndarray, scale, bias, n_heads: int, eps: float) -> jnp.ndarray:
+    b, s, d = y.shape
+    yh = y.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu_ = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu_) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(b, s, d) * scale + bias).astype(y.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, hd: int, s0=None):
+    """The WKV6 recurrence.  r/k/v/w: (B, S, d) fp32.  Returns (y, S_final).
+
+    Per head: y_t = r_t^T (S + diag(u) k_t v_t^T);  S <- diag(w_t) S + k_t v_t^T
+    """
+    b, s, d = r.shape
+    h = d // hd
+    rh = r.reshape(b, s, h, hd).transpose(1, 0, 2, 3)
+    kh = k.reshape(b, s, h, hd).transpose(1, 0, 2, 3)
+    vh = v.reshape(b, s, h, hd).transpose(1, 0, 2, 3)
+    wh = w.reshape(b, s, h, hd).transpose(1, 0, 2, 3)
+    uh = u.reshape(h, hd)
+
+    state0 = jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None else s0
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + uh[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    S, ys = jax.lax.scan(step, state0, (rh, kh, vh, wh))
+    return ys.transpose(1, 0, 2, 3).reshape(b, s, d), S
+
+
+def _wkv_chunked(r, k, v, w, u, hd: int, s0=None, chunk: int = 16):
+    """Chunk-parallel WKV6 (GLA-style), exactly equal to ``_wkv_scan``.
+
+    Within a chunk (length C, relative to chunk start; cum = cumulative
+    log-decay, cum[-1] := 0):
+
+        A[t, j] = sum_c r[t,c] e^{cum[t-1,c]} * k[j,c] e^{-cum[j,c]}   (j < t)
+        A[t, t] = sum_c r[t,c] u[c] k[t,c]                             (bonus)
+        y       = A @ v + (r ⊙ e^{cum_prev}) S_0
+        S_end   = diag(e^{cum_end}) S_0 + (k ⊙ e^{cum_end - cum})^T v
+
+    The state materializes once per CHUNK instead of once per token — a
+    C-fold cut in HBM traffic for the state stream (the dominant term of
+    the rwkv6 train_4k roofline), and the intra-chunk work becomes (C x C)
+    MXU matmuls.  e^{+cum} stays bounded because per-step log-decay is
+    capped at MAX_LOG_DECAY and C * MAX_LOG_DECAY < log(f32_max).
+    """
+    b, s, d = r.shape
+    if s % chunk:
+        return _wkv_scan(r, k, v, w, u, hd, s0)
+    h = d // hd
+    nc = s // chunk
+    c = chunk
+
+    def to_chunks(x):  # (B,S,d) -> (nc, B, H, C, hd)
+        return (x.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4))
+
+    rh, kh, vh = to_chunks(r), to_chunks(k), to_chunks(v)
+    logw = jnp.log(to_chunks(w))  # (nc, B, H, C, hd), entries in [-MAX, 0)
+    uh = u.reshape(h, hd)
+
+    cum = jnp.cumsum(logw, axis=3)  # inclusive cumulative log-decay
+    cum_prev = cum - logw  # exclusive (cum[t-1], with cum[-1] = 0)
+    cum_end = cum[:, :, :, -1:, :]  # (nc, B, H, 1, hd)
+
+    # fp32 streams throughout: a bf16-stream variant was tried and
+    # REFUTED — the extra convert ops add fusion boundaries and *raised*
+    # the measured memory term 113->149 s (§Perf R3).
+    r_in = rh * jnp.exp(cum_prev)  # bounded <= |r|
+    k_in = kh * jnp.exp(-cum)  # bounded by exp(C * MAX_LOG_DECAY)
+    k_out = kh * jnp.exp(cum_end - cum)  # bounded <= |k|
+
+    # intra-chunk attention with strict lower-triangular mask + u diagonal
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    a_intra = jnp.einsum("nbhtc,nbhjc->nbhtj", r_in, k_in)
+    a_intra = jnp.where(tri[None, None, None], a_intra, 0.0)
+    diag = jnp.einsum("nbhtc,nbhtc->nbht", rh, kh * uh[None, None, :, None, :])
+    y_intra = jnp.einsum("nbhtj,nbhjc->nbhtc", a_intra, vh)
+    y_intra = y_intra + diag[..., None] * vh
+
+    state0 = jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None else s0
+
+    def per_chunk(S, xs):
+        r_i, k_o, v_i, ce = xs  # (B,H,C,hd) x3, (B,H,1,hd)
+        y_off = jnp.einsum("bhtc,bhcd->bhtd", r_i, S)
+        S_new = jnp.exp(ce[:, :, 0])[:, :, :, None] * S + jnp.einsum(
+            "bhtc,bhtd->bhcd", k_o, v_i
+        )
+        return S_new, y_off
+
+    S, y_off = jax.lax.scan(per_chunk, state0, (r_in, k_out, vh, cum_end))
+    y = y_intra + y_off  # (nc, B, H, C, hd)
+    y = y.transpose(1, 0, 3, 2, 4).reshape(b, s, d)
+    return y, S
+
+
+def rwkv6_time_mix(prm: RWKV6Params, x: jnp.ndarray, cfg, state=None):
+    """x: (B,S,d).  state: (S0, x_prev) or None.  Returns (out, new_state)."""
+    s0, x_prev = (None, None) if state is None else state
+    xs = _shift(x, x_prev)
+    mr, mk, mv, mg, mw = (
+        _lerp(x, xs, prm.mu_r), _lerp(x, xs, prm.mu_k), _lerp(x, xs, prm.mu_v),
+        _lerp(x, xs, prm.mu_g), _lerp(x, xs, prm.mu_w),
+    )
+    r = (mr @ prm.wr).astype(jnp.float32)
+    k = (mk @ prm.wk).astype(jnp.float32)
+    v = (mv @ prm.wv).astype(jnp.float32)
+    g = jax.nn.silu(mg @ prm.wg)
+    w = _decay(prm, mw)  # (B,S,d) in (0,1)
+    if x.shape[1] > 1 and x.shape[1] % 16 == 0:
+        y, s_new = _wkv_chunked(r, k, v, w, prm.u, cfg.rwkv_head_dim, s0)
+    else:
+        y, s_new = _wkv_scan(r, k, v, w, prm.u, cfg.rwkv_head_dim, s0)
+    y = _group_norm(y.astype(x.dtype), prm.ln_scale, prm.ln_bias,
+                    cfg.d_model // cfg.rwkv_head_dim, cfg.norm_eps)
+    return (y * g) @ prm.wo, (s_new, x[:, -1, :])
+
+
+def rwkv6_channel_mix(prm: RWKV6Params, x: jnp.ndarray, x_prev=None):
+    xs = _shift(x, x_prev)
+    mk = _lerp(x, xs, prm.mu_ck)
+    mr = _lerp(x, xs, prm.mu_cr)
+    k = jnp.square(jax.nn.relu(mk @ prm.ck))
+    return jax.nn.sigmoid(mr @ prm.cr) * (k @ prm.cv), x[:, -1, :]

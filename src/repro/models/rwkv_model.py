@@ -1,0 +1,109 @@
+"""RWKV-6 language model: stacked (time-mix + channel-mix) blocks under
+``lax.scan``; O(1) recurrent cache for decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common
+from repro.models.rwkv6 import (
+    init_rwkv6_params,
+    rwkv6_channel_mix,
+    rwkv6_time_mix,
+)
+
+
+class RWKVLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.shard_x = lambda t: t  # activation sharding hook (launcher-set)
+
+    def init_params(self, key):
+        cfg = self.cfg
+        dtype = common.dtype_of(cfg.dtype)
+        k_embed, k_layers, k_head = jax.random.split(key, 3)
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        return {
+            "embed": common.embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+            "ln_in": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_in_b": jnp.zeros((cfg.d_model,), jnp.float32),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            "lm_head": common.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype),
+            "layers": jax.vmap(lambda k: init_rwkv6_params(k, cfg, dtype))(layer_keys),
+            "ln1": jnp.zeros((cfg.n_layers, cfg.d_model), dtype),
+            "ln2": jnp.zeros((cfg.n_layers, cfg.d_model), dtype),
+        }
+
+    def hidden_states(self, params, x, collect_cache: bool = False):
+        cfg = self.cfg
+
+        def body(h, xs):
+            prm, ln1, ln2 = xs
+            a, (s_new, xp_att) = rwkv6_time_mix(
+                prm, common.rms_norm(h, ln1, cfg.norm_eps), cfg
+            )
+            h = h + a
+            f, xp_ffn = rwkv6_channel_mix(prm, common.rms_norm(h, ln2, cfg.norm_eps))
+            h = h + f
+            out = (s_new, xp_att, xp_ffn) if collect_cache else None
+            return self.shard_x(h), out
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x = self.shard_x(x)
+        x, cache = jax.lax.scan(body_fn, x, (params["layers"], params["ln1"], params["ln2"]))
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, cache
+
+    def loss_fn(self, params, batch):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = common.layer_norm(x, params["ln_in"], params["ln_in_b"], self.cfg.norm_eps)
+        hidden, _ = self.hidden_states(params, x)
+        from repro.models.transformer import _chunked_ce
+
+        loss = _chunked_ce(hidden, params["lm_head"], batch["labels"])
+        return loss, {"ce": loss, "loss": loss}
+
+    # -- serving ---------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq: int):
+        cfg = self.cfg
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return (
+            jnp.zeros((cfg.n_layers, batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                      jnp.float32),
+            jnp.zeros((cfg.n_layers, batch, cfg.d_model), common.dtype_of(cfg.dtype)),
+            jnp.zeros((cfg.n_layers, batch, cfg.d_model), common.dtype_of(cfg.dtype)),
+        )
+
+    def prefill(self, params, batch):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = common.layer_norm(x, params["ln_in"], params["ln_in_b"], self.cfg.norm_eps)
+        hidden, cache = self.hidden_states(params, x, collect_cache=True)
+        logits = hidden[:, -1, :] @ params["lm_head"]
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token[:, None], axis=0)
+        x = common.layer_norm(x, params["ln_in"], params["ln_in_b"], cfg.norm_eps)
+
+        def body(h, xs):
+            prm, ln1, ln2, s0, xp_att, xp_ffn = xs
+            a, (s_new, xp_att2) = rwkv6_time_mix(
+                prm, common.rms_norm(h, ln1, cfg.norm_eps), cfg, state=(s0, xp_att)
+            )
+            h = h + a
+            f, xp_ffn2 = rwkv6_channel_mix(
+                prm, common.rms_norm(h, ln2, cfg.norm_eps), x_prev=xp_ffn
+            )
+            h = h + f
+            return h, (s_new, xp_att2, xp_ffn2)
+
+        x, cache = jax.lax.scan(
+            body, x, (params["layers"], params["ln1"], params["ln2"], *cache)
+        )
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, 0, :] @ params["lm_head"]
+        return logits.astype(jnp.float32), cache

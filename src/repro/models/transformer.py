@@ -1,0 +1,383 @@
+"""Decoder-only transformer LM covering the dense / MoE / MLA / VLM
+architectures (gemma3, phi3, granite, llama3.2, deepseek-v3, arctic,
+llava-next).
+
+Structure: the layer stack is split into homogeneous *segments* (e.g.
+deepseek-v3 = 3 dense layers + 58 MoE layers); each segment's params are
+stacked on a leading layer axis and executed under ``jax.lax.scan`` with
+optional remat — this keeps HLO size and CPU compile time bounded for the
+61-layer 512-device dry-runs.  Per-layer heterogeneity *within* a segment
+(gemma3's 5:1 local:global attention, dual RoPE thetas) is expressed as
+scanned metadata arrays (window sizes, thetas), so one traced block body
+serves every layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import common
+from repro.models.attention import (
+    AttnParams,
+    attention_decode,
+    attention_forward,
+    init_attn_params,
+)
+from repro.models.ffn import FFNParams, ffn_forward, init_ffn_params
+from repro.models.mla import init_mla_params, mla_decode, mla_forward
+from repro.models.moe import MoEParams, init_moe_params, moe_forward
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Per-layer metadata (windows / thetas) for heterogeneous stacks
+# ---------------------------------------------------------------------------
+
+
+def layer_meta(cfg: ModelConfig, n_layers: int, offset: int = 0):
+    """(windows (L,), thetas (L,)) as numpy — scanned alongside params."""
+    windows = np.zeros((n_layers,), np.int32)
+    thetas = np.full((n_layers,), cfg.rope_theta, np.float32)
+    if cfg.local_global_period > 0 and cfg.sliding_window > 0:
+        for i in range(n_layers):
+            gi = i + offset
+            is_global = (gi + 1) % cfg.local_global_period == 0
+            windows[i] = 0 if is_global else cfg.sliding_window
+            thetas[i] = (
+                cfg.rope_theta_global if (is_global and cfg.rope_theta_global) else cfg.rope_theta
+            )
+    elif cfg.sliding_window > 0:
+        windows[:] = cfg.sliding_window
+    return jnp.asarray(windows), jnp.asarray(thetas)
+
+
+# ---------------------------------------------------------------------------
+# Block definitions
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    """One layer's params.  kind: 'dense' | 'moe'."""
+    k1, k2 = jax.random.split(key)
+    dtype = common.dtype_of(cfg.dtype)
+    p: dict = {"ln1": jnp.zeros((cfg.d_model,), dtype), "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.use_mla:
+        p["attn"] = init_mla_params(k1, cfg, dtype)
+    else:
+        p["attn"] = init_attn_params(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim,
+            dtype, cfg.qk_norm,
+        )
+    if kind == "moe":
+        p["ffn"] = init_moe_params(
+            k2, cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts,
+            cfg.n_shared_experts, dtype,
+        )
+        if cfg.moe_dense_residual:
+            p["dense_ffn"] = init_ffn_params(
+                jax.random.fold_in(k2, 1), cfg.d_model, cfg.d_ff, dtype
+            )
+    else:
+        ff = cfg.dense_d_ff if (cfg.dense_d_ff and cfg.is_moe) else cfg.d_ff
+        p["ffn"] = init_ffn_params(k2, cfg.d_model, ff, dtype)
+    if cfg.name.startswith("gemma"):  # gemma3 sandwich norms
+        p["post_ln1"] = jnp.zeros((cfg.d_model,), dtype)
+        p["post_ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _block_forward(
+    cfg: ModelConfig,
+    kind: str,
+    x: jnp.ndarray,
+    prm: dict,
+    window,
+    theta,
+    positions,
+    flash_blk: int,
+):
+    """Full-sequence block.  Returns (x, (k, v) cache entry, aux loss)."""
+    h = common.rms_norm(x, prm["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        h, kv = mla_forward(prm["attn"], h, cfg, positions, flash_blk=flash_blk)
+    else:
+        h, kv = attention_forward(
+            prm["attn"], h,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=theta, positions=positions, causal=True, window=window,
+            logit_softcap=cfg.attn_logit_softcap, norm_eps=cfg.norm_eps,
+            flash_blk=flash_blk,
+        )
+    if "post_ln1" in prm:
+        h = common.rms_norm(h, prm["post_ln1"], cfg.norm_eps)
+    x = x + h
+
+    f_in = common.rms_norm(x, prm["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if kind == "moe":
+        f, aux = moe_forward(
+            prm["ffn"], f_in, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor, act=cfg.act,
+        )
+        if cfg.moe_dense_residual:
+            f = f + ffn_forward(prm["dense_ffn"], f_in, cfg.act)
+    else:
+        f = ffn_forward(prm["ffn"], f_in, cfg.act)
+    if "post_ln2" in prm:
+        f = common.rms_norm(f, prm["post_ln2"], cfg.norm_eps)
+    return x + f, kv, aux
+
+
+def _block_decode(
+    cfg: ModelConfig, kind: str, x, prm, cache, window, theta, pos
+):
+    """Single-token block.  cache: family-specific tuple."""
+    h = common.rms_norm(x, prm["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        h, cache = mla_decode(prm["attn"], h, cache[0], cache[1], pos, cfg)
+    else:
+        h, cache = attention_decode(
+            prm["attn"], h, cache[0], cache[1], pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=theta, window=window,
+            logit_softcap=cfg.attn_logit_softcap, norm_eps=cfg.norm_eps,
+        )
+    if "post_ln1" in prm:
+        h = common.rms_norm(h, prm["post_ln1"], cfg.norm_eps)
+    x = x + h
+
+    f_in = common.rms_norm(x, prm["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        f, _ = moe_forward(
+            prm["ffn"], f_in, top_k=cfg.moe_top_k,
+            capacity_factor=4.0, act=cfg.act,  # decode: tiny T, generous capacity
+        )
+        if cfg.moe_dense_residual:
+            f = f + ffn_forward(prm["dense_ffn"], f_in, cfg.act)
+    else:
+        f = ffn_forward(prm["ffn"], f_in, cfg.act)
+    if "post_ln2" in prm:
+        f = common.rms_norm(f, prm["post_ln2"], cfg.norm_eps)
+    return x + f, cache
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig, flash_blk: int = 512):
+        self.cfg = cfg
+        self.flash_blk = flash_blk
+        self.shard_x = lambda t: t  # activation sharding hook (launcher-set)
+        # segments: list of (kind, n_layers, global_layer_offset)
+        if cfg.is_moe and cfg.first_dense_layers > 0:
+            self.segments = [
+                ("dense", cfg.first_dense_layers, 0),
+                ("moe", cfg.n_layers - cfg.first_dense_layers, cfg.first_dense_layers),
+            ]
+        elif cfg.is_moe:
+            self.segments = [("moe", cfg.n_layers, 0)]
+        else:
+            self.segments = [("dense", cfg.n_layers, 0)]
+
+    # -- params ------------------------------------------------------------
+
+    def init_params(self, key) -> Params:
+        cfg = self.cfg
+        dtype = common.dtype_of(cfg.dtype)
+        keys = jax.random.split(key, len(self.segments) + 3)
+        params: dict = {
+            "embed": common.embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(
+                keys[1], (cfg.d_model, cfg.vocab_size), dtype
+            )
+        for si, (kind, n, _off) in enumerate(self.segments):
+            seg_keys = jax.random.split(keys[2 + si], n)
+            params[f"seg{si}"] = jax.vmap(
+                lambda k: _init_block(k, cfg, kind)
+            )(seg_keys)
+        if cfg.mtp_depth > 0:
+            k = keys[-1]
+            params["mtp"] = {
+                "proj": common.dense_init(k, (2 * cfg.d_model, cfg.d_model), dtype),
+                "block": jax.vmap(lambda kk: _init_block(kk, cfg, "dense"))(
+                    jax.random.split(jax.random.fold_in(k, 1), 1)
+                ),
+                "ln": jnp.zeros((cfg.d_model,), dtype),
+            }
+        return params
+
+    def _head(self, params):
+        return (
+            params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        )
+
+    def embed_tokens(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(np.sqrt(self.cfg.d_model), x.dtype)
+        return x
+
+    # -- forward (train / prefill) ------------------------------------------
+
+    def hidden_states(self, params, x, positions, collect_cache: bool = False):
+        """x: (B, S, d) embeddings.  Returns (hidden, caches, aux_sum)."""
+        cfg = self.cfg
+        caches = []
+        aux_total = jnp.float32(0.0)
+        x = self.shard_x(x)
+        for si, (kind, n, off) in enumerate(self.segments):
+            windows, thetas = layer_meta(cfg, n, off)
+
+            def body(h, xs, _kind=kind):
+                prm, window, theta = xs
+                h2, kv, aux = _block_forward(
+                    cfg, _kind, h, prm, window, theta, positions, self.flash_blk
+                )
+                out = (kv, aux) if collect_cache else (None, aux)
+                return self.shard_x(h2), out
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, (kv, aux) = jax.lax.scan(body_fn, x, (params[f"seg{si}"], windows, thetas))
+            aux_total = aux_total + jnp.sum(aux)
+            if collect_cache:
+                caches.append(kv)
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, caches, aux_total
+
+    # -- losses --------------------------------------------------------------
+
+    def loss_fn(self, params, batch) -> tuple[jnp.ndarray, dict]:
+        """batch: {'tokens' (B,S) | 'embeds' (B,S,d), 'labels' (B,S)}."""
+        cfg = self.cfg
+        if cfg.embeddings_input:
+            x = batch["embeds"]
+        else:
+            x = self.embed_tokens(params, batch["tokens"])
+        b, s = x.shape[:2]
+        positions = jnp.arange(s)
+        hidden, _, aux = self.hidden_states(params, x, positions)
+        head = self._head(params)
+        loss = _chunked_ce(hidden, head, batch["labels"])
+        metrics = {"ce": loss, "aux": aux}
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_coef * aux
+        if cfg.mtp_depth > 0 and not cfg.embeddings_input:
+            mtp_loss = self._mtp_loss(params, hidden, batch, positions)
+            loss = loss + 0.3 * mtp_loss
+            metrics["mtp"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _mtp_loss(self, params, hidden, batch, positions):
+        """DeepSeek-V3 multi-token prediction (depth 1): one extra block over
+        [h_t ; emb(t+1)] predicting token t+2."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        emb_next = self.embed_tokens(params, jnp.roll(tokens, -1, axis=1))
+        h = jnp.concatenate([hidden, emb_next], axis=-1) @ params["mtp"]["proj"]
+        windows, thetas = layer_meta(cfg, 1)
+        prm1 = jax.tree.map(lambda a: a[0], params["mtp"]["block"])
+        h, _, _ = _block_forward(
+            cfg, "dense", h, prm1, windows[0], thetas[0], positions, self.flash_blk
+        )
+        h = common.rms_norm(h, params["mtp"]["ln"], cfg.norm_eps)
+        labels2 = jnp.roll(labels, -1, axis=1)
+        mask = jnp.ones_like(labels2, jnp.float32).at[:, -2:].set(0.0)
+        return _chunked_ce(h, self._head(params), labels2, mask=mask)
+
+    # -- serving --------------------------------------------------------------
+
+    def prefill(self, params, batch):
+        """Returns (last-token logits (B, V), cache pytree)."""
+        cfg = self.cfg
+        x = (
+            batch["embeds"] if cfg.embeddings_input
+            else self.embed_tokens(params, batch["tokens"])
+        )
+        positions = jnp.arange(x.shape[1])
+        hidden, caches, _ = self.hidden_states(params, x, positions, collect_cache=True)
+        logits = hidden[:, -1, :] @ self._head(params)
+        return logits.astype(jnp.float32), caches
+
+    def init_cache(self, batch: int, seq: int):
+        cfg = self.cfg
+        dtype = common.dtype_of(cfg.dtype)
+        caches = []
+        for _si, (_kind, n, _off) in enumerate(self.segments):
+            if cfg.use_mla:
+                caches.append(
+                    (
+                        jnp.zeros((n, batch, seq, cfg.kv_lora_rank), dtype),
+                        jnp.zeros((n, batch, seq, cfg.qk_rope_dim), dtype),
+                    )
+                )
+            else:
+                kvh = (n, batch, seq, cfg.n_kv_heads, cfg.resolved_head_dim)
+                caches.append((jnp.zeros(kvh, dtype), jnp.zeros(kvh, dtype)))
+        return caches
+
+    def decode_step(self, params, cache, token, pos):
+        """token: (B,) int32 (or (B,1,d) embeds); pos: () int32.
+        Returns (logits (B, V) fp32, new cache)."""
+        cfg = self.cfg
+        if cfg.embeddings_input and token.ndim == 3:
+            x = token
+        else:
+            x = self.embed_tokens(params, token[:, None])
+        new_caches = []
+        x = self.shard_x(x)
+        for si, (kind, n, off) in enumerate(self.segments):
+            windows, thetas = layer_meta(cfg, n, off)
+
+            def body(h, xs, _kind=kind):
+                prm, c, window, theta = xs
+                h2, c2 = _block_decode(cfg, _kind, h, prm, c, window, theta, pos)
+                return self.shard_x(h2), c2
+
+            x, c2 = jax.lax.scan(body, x, (params[f"seg{si}"], cache[si], windows, thetas))
+            new_caches.append(c2)
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, 0, :] @ self._head(params)
+        return logits.astype(jnp.float32), new_caches
+
+
+def _chunked_ce(hidden, head, labels, mask=None, chunk: int = 512):
+    """Cross entropy with the (B, chunk, V) logits block scanned over the
+    sequence so the full (B, S, V) logits tensor never materializes
+    (vocab up to 262 K)."""
+    b, s, d = hidden.shape
+    if s <= chunk or s % chunk:
+        logits = hidden @ head
+        return common.cross_entropy(logits, labels, mask)
+    nc = s // chunk
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    ms = (
+        mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+        if mask is not None
+        else jnp.ones((nc, b, chunk), jnp.float32)
+    )
+
+    def step(acc, xs):
+        hc, lc, mc = xs
+        logits = (hc @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

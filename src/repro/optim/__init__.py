@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamW, AdamWConfig, lr_schedule  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    quantize_int8,
+    dequantize_int8,
+    compress_tree,
+    decompress_tree,
+)

@@ -1,0 +1,105 @@
+"""AdamW in pure JAX pytrees: global-norm clipping, decoupled weight decay
+(matrix params only), warmup+cosine schedule, configurable moment dtype
+(bf16 moments halve optimizer HBM for the 671B dry-run cells).
+
+ZeRO-1 note: moments inherit each parameter's sharding (params are already
+FSDP-sharded over `data`), so optimizer state is fully sharded with no
+extra machinery; the update is elementwise and stays local.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # 'bfloat16' halves optimizer memory
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(1.0, cfg.decay_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _decay_mask(params: Any) -> Any:
+    """Weight decay on >=2-D weights only (norms/biases/scalars exempt)."""
+    return jax.tree.map(lambda p: jnp.asarray(float(p.ndim >= 2), jnp.float32), params)
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+
+    def init(self, params: Any) -> dict:
+        mdt = jnp.bfloat16 if self.cfg.moment_dtype == "bfloat16" else jnp.float32
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(
+        self, grads: Any, state: dict, params: Any
+    ) -> tuple[Any, dict, dict]:
+        cfg = self.cfg
+        step = state["step"] + 1
+        lr = lr_schedule(cfg, step)
+
+        # global-norm clip in fp32
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+        )
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+        decay = _decay_mask(params)
+
+        def upd(g, m, v, p, dmask):
+            gf = g.astype(jnp.float32) * scale
+            m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+            v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * dmask * p.astype(
+                jnp.float32
+            )
+            p2 = p.astype(jnp.float32) - lr * delta
+            return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+        # flatten (NamedTuple leaves make tuple-based unzipping unsafe)
+        g_l, treedef = jax.tree.flatten(grads)
+        m_l = jax.tree.leaves(state["m"])
+        v_l = jax.tree.leaves(state["v"])
+        p_l = jax.tree.leaves(params)
+        d_l = jax.tree.leaves(decay)
+        outs = [upd(*args) for args in zip(g_l, m_l, v_l, p_l, d_l)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_state = {
+            "m": treedef.unflatten([o[1] for o in outs]),
+            "v": treedef.unflatten([o[2] for o in outs]),
+            "step": step,
+        }
+        return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,51 @@
+"""Gradient compression with error feedback (1-bit-Adam-style int8 variant).
+
+For cross-pod gradient reduction the wire format is int8 + one fp32 scale
+per tensor; the quantization error is carried in a residual buffer and
+added back next step (error feedback), which keeps convergence unbiased.
+Used by the trainer's ``compress_grads='int8'`` mode: gradients are
+quantized before the (slow) pod-axis reduction and dequantized after,
+cutting pod-link bytes 4x at bf16 (§Perf collective-term lever).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, residual: Any | None = None):
+    """Returns ((q_tree, scale_tree), new_residual)."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual
+    )
+    # flatten: NamedTuple params make tuple-leaf unzipping unsafe
+    c_l, treedef = jax.tree.flatten(corrected)
+    qs = [quantize_int8(c) for c in c_l]
+    q = treedef.unflatten([t[0] for t in qs])
+    s = treedef.unflatten([t[1] for t in qs])
+    new_residual = treedef.unflatten(
+        [c - dequantize_int8(qq, ss) for c, (qq, ss) in zip(c_l, qs)]
+    )
+    return (q, s), new_residual
+
+
+def decompress_tree(q: Any, s: Any, like: Any):
+    return jax.tree.map(
+        lambda qq, ss, g: dequantize_int8(qq, ss).astype(g.dtype), q, s, like
+    )

@@ -1,0 +1,7 @@
+from repro.sharding.partition import (  # noqa: F401
+    param_pspecs,
+    batch_pspec,
+    cache_pspecs,
+    attach,
+    MeshAxes,
+)

@@ -1,0 +1,251 @@
+"""PartitionSpec rules: TP on heads / ffn / experts / vocab, FSDP wrap on
+the data axis, EP for MoE — derived from parameter *names* (pytree paths)
+with shape-aware fallbacks, and fitted for divisibility (axes that do not
+divide a dim are dropped from its spec rather than producing uneven
+shards).
+
+Conventions (single-pod mesh ("data", "model"); multi-pod adds a leading
+"pod" axis used as extra data parallelism / FSDP):
+
+  embed (V, d)            -> (tp, fsdp)        vocab-sharded embedding
+  lm_head (d, V)          -> (fsdp, tp)
+  wq/wk/wv (d, H*hd)      -> (fsdp, tp)        column parallel
+  wo (H*hd, d)            -> (tp, fsdp)        row parallel
+  ffn w_gate/w_up (d, f)  -> (fsdp, tp)
+  ffn w_down (f, d)       -> (tp, fsdp)
+  moe router (d, E)       -> (fsdp, None)
+  moe w_* (E, d, f)       -> (EP on E, fsdp, None)
+  1-D / scalar leaves     -> replicated
+
+Layer-stack leading axes (scan segments) get None prepended automatically
+(detected by comparing leaf rank to the rule's expected core rank).
+
+KV caches (decode): batch over data(+pod); heads on model when divisible
+(gemma3/granite have 1 KV head), otherwise the *sequence* axis is sharded
+on model — the flash-decode partial-softmax layout (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class MeshAxes:
+    """Resolved axis names + sizes for the active mesh."""
+
+    def __init__(self, mesh: Mesh, *, fsdp: bool = True):
+        names = mesh.axis_names
+        sizes = dict(zip(names, np.shape(mesh.devices)))
+        self.sizes = sizes
+        self.model = "model" if "model" in names else None
+        self.data = "data" if "data" in names else None
+        self.pod = "pod" if "pod" in names else None
+        self.fsdp_enabled = fsdp
+        if not fsdp:
+            self.fsdp: Any = None
+        elif self.pod and self.data:
+            self.fsdp = ("pod", "data")
+        else:
+            self.fsdp = self.data
+
+    def axis_size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            return int(np.prod([self.sizes[a] for a in axis]))
+        return int(self.sizes.get(axis, 1))
+
+    def batch_axes(self) -> tuple:
+        return tuple(a for a in (self.pod, self.data) if a)
+
+    def fit(self, spec: tuple, shape: tuple) -> P:
+        """Drop axes that do not evenly divide their dim."""
+        out = []
+        for axis, dim in zip(spec, shape):
+            if axis is None:
+                out.append(None)
+            elif dim % self.axis_size(axis) == 0:
+                out.append(axis)
+            elif isinstance(axis, tuple):
+                # try a prefix of the composite axis (e.g. just 'data')
+                kept = None
+                for cut in range(len(axis) - 1, 0, -1):
+                    sub = axis[:cut]
+                    if dim % self.axis_size(sub) == 0:
+                        kept = sub if len(sub) > 1 else sub[0]
+                        break
+                out.append(kept)
+            else:
+                out.append(None)
+        return P(*out)
+
+
+_ROW_PARALLEL = {"wo", "w_down", "out_proj", "cv", "wuv"}  # contraction dim sharded
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "w_gate", "w_up", "in_proj", "wuq", "wuk",
+    "wr", "wg", "ck", "cr", "w1", "wdq", "wdkv", "wkr", "proj",
+}
+_REPLICATED_2D = {"conv_w", "w_lora_a", "w_lora_b"}
+_VECTOR_NAMES = {
+    "ln1", "ln2", "ln_x", "post_ln1", "post_ln2", "norm", "q_ln", "kv_ln",
+    "mamba_ln", "ln_scale", "ln_bias", "b1", "b2", "conv_b", "a_log",
+    "d_skip", "dt_bias", "u", "w0", "final_norm", "enc_norm", "ln_in",
+    "ln_in_b", "ln",
+}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    if hasattr(last, "name"):
+        return str(last.name)
+    if hasattr(last, "key"):
+        return str(last.key)
+    return str(last)
+
+
+def _core_rank(name: str, shape: tuple, cfg) -> int:
+    """Rank of the per-layer (unstacked) parameter for this name."""
+    if name in _VECTOR_NAMES or name.startswith("mu_"):
+        return 1
+    if name == "w2":
+        return 2
+    if cfg is not None and getattr(cfg, "n_experts", 0):
+        if name in ("w_gate", "w_up", "w_down") and cfg.n_experts in shape:
+            return 3  # (E, d, f)
+    if name == "conv_w":
+        return 2
+    return 2
+
+
+def _core_spec(name: str, shape: tuple, cfg, axes: MeshAxes) -> tuple:
+    tp, fsdp = axes.model, axes.fsdp
+    nd = len(shape)
+    if nd == 1:
+        return (None,)
+    if nd == 3:
+        return (tp, fsdp, None)  # expert weights: EP + FSDP
+    if nd == 2:
+        v = getattr(cfg, "vocab_size", -1) if cfg is not None else -1
+        if name == "embed" and shape[0] == v:
+            return (tp, fsdp)
+        if name == "lm_head":
+            return (fsdp, tp)
+        if name in _REPLICATED_2D:
+            return (None, None)
+        if name in _ROW_PARALLEL or name == "w2":
+            return (tp, fsdp)
+        if name in _COL_PARALLEL:
+            return (fsdp, tp)
+        if name == "router":
+            return (fsdp, None)
+        return (fsdp, tp) if shape[1] >= shape[0] else (tp, fsdp)
+    return tuple(None for _ in shape)
+
+
+def _spec_for_leaf(path, leaf, cfg, axes: MeshAxes) -> P:
+    name = _leaf_name(path)
+    shape = tuple(leaf.shape)
+    if len(shape) == 0:
+        return P()
+    core = _core_rank(name, shape, cfg)
+    stack = max(0, len(shape) - core)
+    spec = _core_spec(name, shape[stack:], cfg, axes)
+    return axes.fit(tuple([None] * stack) + tuple(spec), shape)
+
+
+def param_pspecs(params_shape: Any, cfg, axes: MeshAxes):
+    """Pytree of PartitionSpec matching a params (shape-)pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_leaf(path, leaf, cfg, axes), params_shape
+    )
+
+
+def batch_pspec(axes: MeshAxes) -> P:
+    b = axes.batch_axes()
+    return P(b if len(b) > 1 else (b[0] if b else None))
+
+
+def _cache_spec(path, leaf, cfg, axes: MeshAxes) -> P:
+    shape = tuple(leaf.shape)
+    name = _leaf_name(path)
+    b = axes.batch_axes()
+    bspec = b if len(b) > 1 else (b[0] if b else None)
+    tp = axes.model
+    tp_size = axes.axis_size(tp)
+    if name == "conv" and len(shape) == 5:  # (G, P, B, W-1, C) zamba conv tail
+        spec = (None, None, bspec, None, None)
+    elif len(shape) == 5 and shape[3] == shape[4]:  # (L, B, H, dk, dv) rwkv state
+        spec = (None, bspec, tp, None, None)
+    elif len(shape) == 5:  # (L, B, S, KV, D) attention cache
+        if shape[3] % tp_size == 0:
+            spec = (None, bspec, None, tp, None)
+        else:
+            spec = (None, bspec, tp, None, None)  # sequence-sharded KV
+    elif len(shape) == 6:  # (G, P, B, H, Pd, N) zamba ssm state
+        spec = (None, None, bspec, tp, None, None)
+    elif len(shape) == 4:
+        if name == "ssm" or shape[-1] == shape[-2]:  # rwkv (L,B,hd,hd)-ish state
+            spec = (None, bspec, None, None)
+        else:  # (L, B, S, lora) MLA compressed cache: shard sequence
+            spec = (None, bspec, tp, None)
+    elif len(shape) == 3:
+        spec = (None, bspec, None)
+    elif len(shape) == 2:
+        spec = (bspec, None)
+    else:
+        spec = tuple(None for _ in shape)
+    return axes.fit(spec, shape)
+
+
+def cache_pspecs(cache_shape: Any, cfg, axes: MeshAxes):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_spec(path, leaf, cfg, axes), cache_shape
+    )
+
+
+def activation_sharder(mesh: Mesh, axes: MeshAxes | None = None):
+    """Returns shard_x(t): a with_sharding_constraint for activations.
+
+    Layout (Megatron-SP style): batch over (pod, data); for full-sequence
+    activations (B, S, d) the *sequence* axis is sharded on `model`
+    between blocks — attention/FFN internals re-gather as needed
+    (all-gather / reduce-scatter pairs inserted by GSPMD), and the scan
+    carries + remat residuals stay 1/model-size.  Without this constraint
+    GSPMD replicates the batch dim of scan residuals (measured: 21 GiB of
+    f32 per device on llama3.2-3b train_4k — see EXPERIMENTS.md §Perf).
+    """
+    axes = axes or MeshAxes(mesh)
+    b = axes.batch_axes()
+    bspec = b if len(b) > 1 else (b[0] if b else None)
+    tp = axes.model
+    tp_size = axes.axis_size(tp)
+
+    def shard_x(t):
+        if t.ndim == 3:
+            if t.shape[1] > 1 and t.shape[1] % tp_size == 0:
+                spec = P(bspec, tp, None)  # sequence-parallel between blocks
+            else:
+                spec = P(bspec, None, None)
+        elif t.ndim == 2:
+            spec = P(bspec, None)
+        else:
+            return t
+        spec = axes.fit(tuple(spec), tuple(t.shape))
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    return shard_x
+
+
+def attach(mesh: Mesh, tree_shape: Any, specs: Any):
+    """ShapeDtypeStructs with NamedShardings attached (for .lower())."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        tree_shape,
+        specs,
+    )

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Single-device for unit tests (the dry-run sets its own 512-device flag
+# in a separate process).  Keep CPU determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

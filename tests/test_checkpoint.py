@@ -1,0 +1,72 @@
+"""Checkpointing: bitexact roundtrip, atomicity, retention, templates."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "embed": jnp.asarray(rng.normal(size=(16, 8)), jnp.bfloat16),
+            "attn": (jnp.asarray(rng.normal(size=(8, 8)), jnp.float32),),
+        },
+        "step": jnp.int32(7),
+    }
+
+
+def test_roundtrip_bitexact(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 7, tree)
+    step, restored = restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: tree))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(s))
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 30
+    files = sorted(os.listdir(tmp_path))
+    assert "step_00000010.npz" not in files  # gc'd
+    assert "step_00000020.npz" in files and "step_00000030.npz" in files
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, _tree(1))
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_no_tmp_leftovers(tmp_path):
+    save_checkpoint(str(tmp_path), 5, _tree())
+    assert not [f for f in os.listdir(tmp_path) if f.startswith("tmp.")]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    bad = _tree()
+    bad["params"]["embed"] = jnp.zeros((4, 4), jnp.bfloat16)
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: bad))
+
+
+def test_restore_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "nope"), _tree())

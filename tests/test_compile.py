@@ -1,0 +1,106 @@
+"""CAM compiler invariants.
+
+The load-bearing property: for any tree and any query, EXACTLY ONE CAM row
+of that tree matches (the leaves partition bin space).  This is what makes
+``match @ leaf_matrix`` equal to leaf lookup.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compile import ChipSpec, compile_ensemble, pack_cores, padded_table
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, train_gbdt
+from repro.data.tabular import make_dataset
+
+
+def _match_matrix(table, q):
+    lo = table.low[None, :, :]
+    hi = table.high[None, :, :]
+    qe = q[:, None, :]
+    return ((lo <= qe) & (qe < hi)).all(axis=-1)  # (B, R)
+
+
+@pytest.fixture(scope="module")
+def small_ensemble():
+    ds = make_dataset("eye")
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    xb = q.transform(ds.x_train)
+    ens = train_gbdt(xb, ds.y_train, task="multiclass", n_bins=256,
+                     n_classes=ds.n_classes,
+                     params=GBDTParams(n_rounds=4, max_leaves=32))
+    return ens, xb
+
+
+def test_row_count_equals_total_leaves(small_ensemble):
+    ens, _ = small_ensemble
+    table = compile_ensemble(ens)
+    assert table.n_rows == ens.total_leaves
+
+
+def test_exactly_one_match_per_tree(small_ensemble):
+    ens, xb = small_ensemble
+    table = compile_ensemble(ens)
+    q = xb[:200].astype(np.int32)
+    match = _match_matrix(table, q)
+    for i in range(ens.n_trees):
+        rows = table.tree_id == i
+        counts = match[:, rows].sum(axis=1)
+        np.testing.assert_array_equal(counts, 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_exactly_one_match_random_queries(small_ensemble, seed):
+    """Property: holds for ARBITRARY bin vectors, not just dataset rows."""
+    ens, _ = small_ensemble
+    table = compile_ensemble(ens)
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 256, size=(16, table.n_features)).astype(np.int32)
+    match = _match_matrix(table, q)
+    for i in range(min(8, ens.n_trees)):
+        counts = match[:, table.tree_id == i].sum(axis=1)
+        np.testing.assert_array_equal(counts, 1)
+
+
+def test_dont_care_fraction_positive(small_ensemble):
+    ens, _ = small_ensemble
+    table = compile_ensemble(ens)
+    # shallow trees over 26 features touch few features per path
+    assert table.dont_care_fraction() > 0.5
+
+
+def test_pack_cores_capacity(small_ensemble):
+    ens, _ = small_ensemble
+    table = compile_ensemble(ens)
+    plc = pack_cores(table)
+    spec = plc.spec
+    leaves = np.bincount(table.tree_id, minlength=table.n_trees)
+    for trees, used in zip(plc.core_trees, plc.core_rows_used):
+        assert sum(int(leaves[t]) for t in trees) == used <= spec.n_words
+    placed = sorted(t for core in plc.core_trees for t in core)
+    assert placed == list(range(table.n_trees))
+    assert plc.replication >= 1
+    assert plc.n_feature_segments == int(np.ceil(table.n_features / spec.array_cols))
+
+
+def test_pack_cores_rejects_oversized_tree(small_ensemble):
+    ens, _ = small_ensemble
+    table = compile_ensemble(ens)
+    with pytest.raises(ValueError):
+        pack_cores(table, ChipSpec(array_rows=4, n_stacked=2))
+
+
+def test_padded_rows_never_match(small_ensemble):
+    ens, _ = small_ensemble
+    table = compile_ensemble(ens)
+    low, high, leaf_m, r_pad = padded_table(table, row_multiple=256)
+    assert r_pad % 256 == 0
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 256, size=(8, table.n_features)).astype(np.int32)
+    pad_match = (
+        (low[None, table.n_rows:] <= q[:, None]) & (q[:, None] < high[None, table.n_rows:])
+    ).all(-1)
+    assert not pad_match.any()
+    np.testing.assert_array_equal(leaf_m[table.n_rows:], 0.0)

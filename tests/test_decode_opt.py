@@ -1,0 +1,42 @@
+"""shard_map flash-decode merge == single-device decode attention."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_flash_decode_shardmap_matches_reference():
+    code = r"""
+import json, numpy as np
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_host_mesh
+from repro.models.attention import decode_attention
+from repro.models.decode_opt import flash_decode_shardmap
+
+mesh = make_host_mesh(2, 4)
+rng = np.random.default_rng(0)
+b, s, h, kv, d = 2, 64, 8, 1, 16  # MQA: kv=1 cannot shard heads
+q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+k = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+v = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+pos = jnp.int32(37)  # part of the cache is invalid/masked
+
+ref = decode_attention(q, k, v, pos)
+out = jax.jit(lambda *a: flash_decode_shardmap(mesh, *a))(q, k, v, pos)
+print(json.dumps({"maxerr": float(jnp.abs(ref - out).max()),
+                  "scale": float(jnp.abs(ref).max())}))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["maxerr"] < 1e-5 * max(1.0, res["scale"]), res

@@ -1,0 +1,100 @@
+"""Engine correctness: CAM engine == traversal baseline == Ensemble, for
+every (kind, task) combination, plus defect injection behaviour."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import TraversalBaseline
+from repro.core.compile import compile_ensemble
+from repro.core.defects import inject_query_defects, inject_table_defects
+from repro.core.engine import XTimeEngine
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, RFParams, train_gbdt, train_rf
+from repro.data.tabular import make_dataset
+
+CASES = [
+    ("churn", "binary", "gbdt"),
+    ("eye", "multiclass", "gbdt"),
+    ("rossmann", "regression", "gbdt"),
+    ("eye", "multiclass", "rf"),
+    ("churn", "binary", "rf"),
+    ("rossmann", "regression", "rf"),
+]
+
+
+@pytest.fixture(scope="module")
+def trained():
+    out = {}
+    for name, task, kind in CASES:
+        ds = make_dataset(name)
+        q = FeatureQuantizer.fit(ds.x_train, 256)
+        xb_tr, xb_te = q.transform(ds.x_train), q.transform(ds.x_test)
+        if kind == "gbdt":
+            ens = train_gbdt(xb_tr, ds.y_train, task=task, n_bins=256,
+                             n_classes=ds.n_classes,
+                             params=GBDTParams(n_rounds=5, max_leaves=32))
+        else:
+            ens = train_rf(xb_tr, ds.y_train, task=task, n_bins=256,
+                           n_classes=ds.n_classes,
+                           params=RFParams(n_trees=10, max_leaves=32))
+        out[(name, task, kind)] = (ens, xb_te[:128])
+    return out
+
+
+@pytest.mark.parametrize("case", CASES, ids=[f"{k}-{t}-{n}" for n, t, k in CASES])
+def test_engine_matches_ensemble(trained, case):
+    ens, xb = trained[case]
+    table = compile_ensemble(ens)
+    eng = XTimeEngine(table, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(eng.raw_margin(xb)), ens.raw_margin(xb), rtol=1e-4, atol=1e-5
+    )
+    if ens.task != "regression":
+        np.testing.assert_array_equal(np.asarray(eng.predict(xb)), ens.predict(xb))
+
+
+@pytest.mark.parametrize("case", CASES[:3], ids=[f"{k}-{t}-{n}" for n, t, k in CASES[:3]])
+def test_traversal_matches_ensemble(trained, case):
+    ens, xb = trained[case]
+    tb = TraversalBaseline(ens)
+    np.testing.assert_allclose(
+        np.asarray(tb.raw_margin(xb)), ens.raw_margin(xb), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_pallas_engine_matches_jnp(trained):
+    ens, xb = trained[("eye", "multiclass", "gbdt")]
+    table = compile_ensemble(ens)
+    ej = XTimeEngine(table, backend="jnp")
+    for mode in ("direct", "msb_lsb", "two_cycle"):
+        ep = XTimeEngine(table, backend="pallas", mode=mode, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(ep.raw_margin(xb)), np.asarray(ej.raw_margin(xb)),
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+def test_defects_zero_fraction_is_identity(trained):
+    ens, xb = trained[("eye", "multiclass", "gbdt")]
+    table = compile_ensemble(ens)
+    t2 = inject_table_defects(table, 0.0, np.random.default_rng(0))
+    np.testing.assert_array_equal(t2.low, table.low)
+    np.testing.assert_array_equal(t2.high, table.high)
+    q2 = inject_query_defects(xb.astype(np.int32), 0.0, 256, np.random.default_rng(0))
+    np.testing.assert_array_equal(q2, xb.astype(np.int32))
+
+
+def test_defects_degrade_gracefully(trained):
+    """Small defect rates keep most predictions; large rates break more
+    (Fig. 9b qualitative shape)."""
+    ens, xb = trained[("eye", "multiclass", "gbdt")]
+    table = compile_ensemble(ens)
+    base = np.asarray(XTimeEngine(table, backend="jnp").predict(xb))
+    agree = {}
+    for frac in (0.005, 0.2):
+        t2 = inject_table_defects(table, frac, np.random.default_rng(1))
+        pred = np.asarray(XTimeEngine(t2, backend="jnp").predict(xb))
+        agree[frac] = float((pred == base).mean())
+    assert agree[0.005] > 0.9
+    assert agree[0.005] >= agree[0.2]

@@ -1,0 +1,95 @@
+"""Pallas cam_match kernel: shape/dtype/mode sweep vs the ref.py oracle
+(interpret=True executes the kernel body on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels.cam_match import cam_match_pallas
+from repro.kernels.ref import cam_match_bits_ref, cam_match_ref
+
+
+def _random_problem(rng, b, r, f, c, n_bins=256):
+    low = rng.integers(0, n_bins, size=(r, f)).astype(np.int32)
+    width = rng.integers(0, n_bins, size=(r, f))
+    high = np.minimum(low + width, n_bins).astype(np.int32)
+    # sprinkle don't-cares
+    dc = rng.random((r, f)) < 0.3
+    low[dc], high[dc] = 0, n_bins
+    leaf = rng.normal(size=(r, c)).astype(np.float32)
+    q = rng.integers(0, n_bins, size=(b, f)).astype(np.int32)
+    return q, low, high, leaf
+
+
+@pytest.mark.parametrize("b,r,f,c", [
+    (8, 64, 10, 1),
+    (64, 512, 130, 8),
+    (128, 256, 26, 3),
+    (1, 300, 54, 7),
+])
+@pytest.mark.parametrize("mode", ["direct", "msb_lsb"])
+def test_kernel_vs_oracle_shapes(b, r, f, c, mode):
+    rng = np.random.default_rng(b * 1000 + r + f + c)
+    q, low, high, leaf = _random_problem(rng, b, r, f, c)
+    lo_p, hi_p, leaf_p = kops.pad_tables(low, high, leaf, r_blk=256, n_bins=256)
+    q_p = kops.pad_queries(jnp.asarray(q), lo_p.shape[1])
+    out = kops.cam_match(
+        q_p, jnp.asarray(lo_p), jnp.asarray(hi_p), jnp.asarray(leaf_p),
+        out_b=b, out_c=c, mode=mode, interpret=True,
+    )
+    ref = cam_match_ref(jnp.asarray(q), jnp.asarray(low), jnp.asarray(high),
+                        jnp.asarray(leaf), mode="direct")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("qdtype", [np.int32, np.uint8])
+def test_kernel_query_dtypes(qdtype):
+    rng = np.random.default_rng(5)
+    q, low, high, leaf = _random_problem(rng, 16, 128, 20, 2)
+    lo_p, hi_p, leaf_p = kops.pad_tables(low, high, leaf, n_bins=256)
+    q_p = kops.pad_queries(jnp.asarray(q.astype(qdtype)), lo_p.shape[1])
+    out = kops.cam_match(q_p, jnp.asarray(lo_p), jnp.asarray(hi_p),
+                         jnp.asarray(leaf_p), out_b=16, out_c=2, interpret=True)
+    ref = cam_match_ref(jnp.asarray(q), jnp.asarray(low), jnp.asarray(high),
+                        jnp.asarray(leaf))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_16bit_bins_direct_mode():
+    """n_bins = 4096 ('unconstrained' grid) — direct mode handles wider
+    integer thresholds."""
+    rng = np.random.default_rng(6)
+    q, low, high, leaf = _random_problem(rng, 8, 128, 12, 1, n_bins=4096)
+    lo_p, hi_p, leaf_p = kops.pad_tables(low, high, leaf, n_bins=4096)
+    q_p = kops.pad_queries(jnp.asarray(q), lo_p.shape[1])
+    out = kops.cam_match(q_p, jnp.asarray(lo_p), jnp.asarray(hi_p),
+                         jnp.asarray(leaf_p), out_b=8, out_c=1, interpret=True)
+    ref = cam_match_ref(jnp.asarray(q), jnp.asarray(low), jnp.asarray(high),
+                        jnp.asarray(leaf))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_block_shape_invariance():
+    rng = np.random.default_rng(7)
+    q, low, high, leaf = _random_problem(rng, 32, 512, 30, 4)
+    outs = []
+    for r_blk in (128, 256, 512):
+        lo_p, hi_p, leaf_p = kops.pad_tables(low, high, leaf, r_blk=r_blk, n_bins=256)
+        q_p = kops.pad_queries(jnp.asarray(q), lo_p.shape[1])
+        outs.append(np.asarray(kops.cam_match(
+            q_p, jnp.asarray(lo_p), jnp.asarray(hi_p), jnp.asarray(leaf_p),
+            out_b=32, out_c=4, r_blk=r_blk, interpret=True,
+        )))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-6)
+
+
+def test_match_bits_oracle_modes_agree():
+    rng = np.random.default_rng(8)
+    q, low, high, _ = _random_problem(rng, 16, 64, 9, 1)
+    args = (jnp.asarray(q), jnp.asarray(low), jnp.asarray(high))
+    d = cam_match_bits_ref(*args, mode="direct")
+    m = cam_match_bits_ref(*args, mode="msb_lsb")
+    c = cam_match_bits_ref(*args, mode="two_cycle")
+    assert bool(jnp.all(d == m)) and bool(jnp.all(d == c))

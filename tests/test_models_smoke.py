@@ -1,0 +1,148 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward /
+train step on CPU, asserting output shapes + no NaNs; plus prefill+decode
+consistency against the full forward (fp32, generous MoE capacity)."""
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import build_model
+
+SMOKE_MODULES = {
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini",
+    "granite-20b": "repro.configs.granite_20b",
+    "llama3.2-3b": "repro.configs.llama32_3b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1p6b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+}
+B, S = 2, 32
+
+
+def _smoke_cfg(name):
+    return importlib.import_module(SMOKE_MODULES[name]).smoke()
+
+
+def _batch(cfg, rng, b=B, s=S):
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.float32),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s // 2)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s // 2)), jnp.int32),
+        }
+    if cfg.embeddings_input:
+        return {
+            "embeds": jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.float32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        }
+    toks = rng.integers(0, cfg.vocab_size, (b, s))
+    return {
+        "tokens": jnp.asarray(toks, jnp.int32),
+        "labels": jnp.asarray(np.roll(toks, -1, 1), jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("name", sorted(SMOKE_MODULES))
+def test_loss_finite_and_grads_flow(name):
+    cfg = _smoke_cfg(name).replace(dtype="float32")
+    m = build_model(cfg, flash_blk=16)
+    params = m.init_params(jax.random.key(0))
+    batch = _batch(cfg, np.random.default_rng(0))
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(m.loss_fn, has_aux=True)
+    )(params, batch)
+    assert bool(jnp.isfinite(loss)), name
+    assert loss.shape == ()
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0.0, name
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["gemma3-1b", "granite-20b", "deepseek-v3-671b", "arctic-480b",
+     "zamba2-2.7b", "rwkv6-1.6b", "whisper-tiny"],
+)
+def test_prefill_decode_matches_full_forward(name):
+    cfg = _smoke_cfg(name).replace(dtype="float32", capacity_factor=8.0)
+    m = build_model(cfg, flash_blk=16)
+    params = m.init_params(jax.random.key(1))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    if cfg.is_encoder_decoder:
+        frames = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        logits_pf, cache = jax.jit(m.prefill)(
+            params, {"frames": frames, "tokens": toks[:, : S // 2]}
+        )
+        tok_next = toks[:, S // 2]
+        cache = jax.tree.map(
+            lambda c: jnp.pad(c, [(0, 0), (0, 0), (0, 8)] + [(0, 0)] * (c.ndim - 3))
+            if c.ndim >= 4 and c.shape[2] == S // 2 else c,
+            cache,
+        )
+        logits_dec, _ = jax.jit(m.decode_step)(params, cache, tok_next, jnp.int32(S // 2))
+        logits_full, _ = jax.jit(m.prefill)(
+            params,
+            {"frames": frames,
+             "tokens": jnp.concatenate([toks[:, : S // 2], tok_next[:, None]], 1)},
+        )
+    else:
+        logits_pf, cache = jax.jit(m.prefill)(params, {"tokens": toks[:, :-1]})
+
+        def grow(c):
+            if c.ndim >= 3 and c.shape[2] == S - 1 and cfg.family != "ssm":
+                pad = [(0, 0)] * c.ndim
+                pad[2] = (0, 9)
+                return jnp.pad(c, pad)
+            return c
+
+        cache = jax.tree.map(grow, cache)
+        logits_dec, _ = jax.jit(m.decode_step)(params, cache, toks[:, -1], jnp.int32(S - 1))
+        logits_full, _ = jax.jit(m.prefill)(params, {"tokens": toks})
+
+    err = float(jnp.max(jnp.abs(logits_dec - logits_full)))
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-9
+    assert err / scale < 2e-3, (name, err, scale)
+
+
+def test_gemma3_window_meta():
+    from repro.models.transformer import layer_meta
+
+    cfg = _smoke_cfg("gemma3-1b")  # local_global_period=2, window 16
+    windows, thetas = layer_meta(cfg, cfg.n_layers)
+    w = np.asarray(windows)
+    assert (w[0], w[1]) == (16, 0) and (w[2], w[3]) == (16, 0)
+
+
+def test_full_configs_have_exact_assigned_dims():
+    from repro.config import get_config
+
+    spec = {
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    }
+    for name, (L, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(name)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, v), name
+    ds = get_config("deepseek-v3-671b")
+    assert (ds.n_experts, ds.moe_top_k, ds.moe_d_ff) == (256, 8, 2048)
+    ar = get_config("arctic-480b")
+    assert (ar.n_experts, ar.moe_top_k) == (128, 2)
+    za = get_config("zamba2-2.7b")
+    assert za.ssm_state == 64

@@ -1,0 +1,60 @@
+"""NoC router programs (§III-D) and their collective mapping."""
+
+import numpy as np
+
+from repro.core.compile import ChipSpec, compile_ensemble, pack_cores
+from repro.core.noc import plan_noc
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, train_gbdt
+from repro.data.tabular import make_dataset
+
+
+def _table(name, task, n_classes, rounds=4, leaves=32):
+    ds = make_dataset(name)
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    xb = q.transform(ds.x_train)
+    ens = train_gbdt(xb, ds.y_train, task=task, n_bins=256, n_classes=n_classes,
+                     params=GBDTParams(n_rounds=rounds, max_leaves=leaves))
+    return compile_ensemble(ens)
+
+
+def test_regression_plan_is_full_accumulate():
+    table = _table("rossmann", "regression", 1)
+    plc = pack_cores(table)
+    plan = plan_noc(table, plc, batching=False)
+    assert plan.config == "accumulate"
+    assert all(b == 1 for b in plan.router_bits)
+    assert plan.flits_per_sample_per_level[-1] == 1.0
+    assert plan.cp_ops_per_sample == 1
+    assert plan.engine_noc_config == "accumulate"
+
+
+def test_multiclass_plan_forwards_class_streams():
+    table = _table("eye", "multiclass", 3)
+    plc = pack_cores(table)
+    plan = plan_noc(table, plc, batching=False)
+    assert plan.config == "forward"
+    # the root link carries one flit per class per sample -> the paper's
+    # 1/N_classes samples-per-clock bound
+    assert plan.flits_per_sample_per_level[-1] == float(table.n_outputs)
+    assert plan.router_bits[-1] == 0
+    assert plan.cp_ops_per_sample == table.n_outputs + 1
+
+
+def test_batch_plan_replicates_below_boundary():
+    table = _table("churn", "binary", 2)
+    plc = pack_cores(table)
+    assert plc.replication > 1  # small model, chip mostly free
+    plan = plan_noc(table, plc, batching=True)
+    assert plan.config == "batch"
+    assert 1 in plan.router_bits and 0 in plan.router_bits
+    assert plan.replication == plc.replication
+    assert plan.engine_noc_config == "batch"
+
+
+def test_htree_depth():
+    table = _table("churn", "binary", 2)
+    plc = pack_cores(table)
+    plan = plan_noc(table, plc)
+    assert plan.n_levels == int(round(np.log(4096) / np.log(4)))  # 6
+    assert len(plan.router_bits) == plan.n_levels

@@ -1,0 +1,98 @@
+"""Optimizer: AdamW math vs a numpy reference; schedules; compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import AdamW, AdamWConfig, lr_schedule
+from repro.optim.compress import compress_tree, decompress_tree, quantize_int8
+
+
+def _np_adamw_step(p, g, m, v, step, cfg, decay_mask):
+    lr = float(lr_schedule(cfg, jnp.int32(step)))
+    gn = np.sqrt(np.sum(g * g))
+    scale = min(1.0, cfg.clip_norm / max(gn, 1e-12))
+    g = g * scale
+    m2 = cfg.b1 * m + (1 - cfg.b1) * g
+    v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mhat = m2 / (1 - cfg.b1 ** step)
+    vhat = v2 / (1 - cfg.b2 ** step)
+    p2 = p - lr * (mhat / (np.sqrt(vhat) + cfg.eps) + cfg.weight_decay * decay_mask * p)
+    return p2, m2, v2
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(peak_lr=1e-2, warmup_steps=2, decay_steps=100,
+                      weight_decay=0.05, clip_norm=10.0)
+    opt = AdamW(cfg)
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+    state = opt.init(params)
+    np_p = {k: np.asarray(v) for k, v in params.items()}
+    np_m = {k: np.zeros_like(v) for k, v in np_p.items()}
+    np_v = {k: np.zeros_like(v) for k, v in np_p.items()}
+    for step in range(1, 4):
+        grads = {k: jnp.asarray(rng.normal(size=v.shape), jnp.float32)
+                 for k, v in params.items()}
+        # reference (shared global clip over both tensors)
+        g_all = np.concatenate([np.asarray(grads[k]).ravel() for k in ("w", "b")])
+        gn = np.sqrt(np.sum(g_all ** 2))
+        scale = min(1.0, cfg.clip_norm / max(gn, 1e-12))
+        lr = float(lr_schedule(cfg, jnp.int32(step)))
+        for k in ("w", "b"):
+            g = np.asarray(grads[k]) * scale
+            np_m[k] = cfg.b1 * np_m[k] + (1 - cfg.b1) * g
+            np_v[k] = cfg.b2 * np_v[k] + (1 - cfg.b2) * g * g
+            mhat = np_m[k] / (1 - cfg.b1 ** step)
+            vhat = np_v[k] / (1 - cfg.b2 ** step)
+            dm = 1.0 if np_p[k].ndim >= 2 else 0.0
+            np_p[k] = np_p[k] - lr * (mhat / (np.sqrt(vhat) + cfg.eps)
+                                      + cfg.weight_decay * dm * np_p[k])
+        params, state, metrics = opt.update(grads, state, params)
+        for k in ("w", "b"):
+            np.testing.assert_allclose(np.asarray(params[k]), np_p[k],
+                                       rtol=2e-5, atol=2e-6)
+    assert int(state["step"]) == 3
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, decay_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 55, 100, 200)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert 0.1 < lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-6
+    assert abs(lrs[5] - 0.1) < 1e-6  # floor after decay
+
+
+def test_quantize_int8_roundtrip_accuracy():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(x) - np.asarray(q, np.float32) * float(s))
+    assert err.max() <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Sum of dequantized grads + final residual == sum of true grads."""
+    rng = np.random.default_rng(2)
+    grads_seq = [
+        {"w": jnp.asarray(rng.normal(size=(32, 8)) * 10 ** rng.uniform(-3, 0),
+                          jnp.float32)}
+        for _ in range(8)
+    ]
+    residual = None
+    total_sent = np.zeros((32, 8), np.float32)
+    for g in grads_seq:
+        (q, s), residual = compress_tree(g, residual)
+        sent = decompress_tree(q, s, g)
+        total_sent += np.asarray(sent["w"])
+    total_true = sum(np.asarray(g["w"]) for g in grads_seq)
+    np.testing.assert_allclose(
+        total_sent + np.asarray(residual["w"]), total_true, rtol=1e-4, atol=1e-4
+    )
+    # and the carried residual stays bounded by one quantization step
+    assert np.abs(np.asarray(residual["w"])).max() < 1.0

@@ -1,0 +1,65 @@
+"""Eq. 1-3 / Table I precision-doubling scheme: bit-exact equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import precision
+
+
+def test_exhaustive_over_queries_random_thresholds():
+    """All 256 query values x 4096 random (T_L, T_H) pairs."""
+    rng = np.random.default_rng(0)
+    q = jnp.arange(256)[:, None]
+    tl = jnp.asarray(rng.integers(0, 256, size=4096))[None, :]
+    th = jnp.asarray(rng.integers(0, 257, size=4096))[None, :]
+    d = precision.match_direct(q, tl, th)
+    assert bool(jnp.all(d == precision.match_msb_lsb(q, tl, th)))
+    assert bool(jnp.all(d == precision.match_two_cycle(q, tl, th)))
+
+
+def test_exhaustive_small_grid():
+    """Fully exhaustive q x T_L x T_H over a coarse grid crossing every
+    MSB/LSB boundary combination."""
+    vals = np.array([0, 1, 15, 16, 17, 31, 32, 127, 128, 129, 240, 255, 256])
+    q = jnp.arange(256).reshape(-1, 1, 1)
+    tl = jnp.asarray(vals[vals < 256]).reshape(1, -1, 1)
+    th = jnp.asarray(vals).reshape(1, 1, -1)
+    d = precision.match_direct(q, tl, th)
+    m = precision.match_msb_lsb(q, tl, th)
+    c = precision.match_two_cycle(q, tl, th)
+    assert bool(jnp.all(d == m)) and bool(jnp.all(d == c))
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    q=st.integers(0, 255),
+    tl=st.integers(0, 255),
+    th=st.integers(0, 256),
+)
+def test_property_single_cell(q, tl, th):
+    d = bool(precision.match_direct(jnp.int32(q), jnp.int32(tl), jnp.int32(th)))
+    assert d == (tl <= q < th)
+    assert d == bool(precision.match_msb_lsb(jnp.int32(q), jnp.int32(tl), jnp.int32(th)))
+    assert d == bool(precision.match_two_cycle(jnp.int32(q), jnp.int32(tl), jnp.int32(th)))
+
+
+def test_dont_care_cell_always_matches():
+    q = jnp.arange(256)
+    assert bool(jnp.all(precision.match_msb_lsb(q, jnp.int32(0), jnp.int32(256))))
+
+
+def test_macro_cell_count():
+    # the paper's point: 2 cells for 8-bit, not 2^(N-M) = 16 (§III-B)
+    assert precision.macro_cell_count(130, n_bits=8) == 260
+    assert precision.macro_cell_count(130, n_bits=4) == 130
+    with pytest.raises(ValueError):
+        precision.macro_cell_count(10, n_bits=12)
+
+
+def test_split_roundtrip():
+    v = jnp.arange(256)
+    hi, lo = precision.split_msb_lsb(v)
+    assert bool(jnp.all(hi * 16 + lo == v))
+    assert int(hi.max()) == 15 and int(lo.max()) == 15

@@ -1,0 +1,161 @@
+"""Sharding rules + multi-device execution (subprocess with 8 fake host
+devices so the single-device unit-test environment stays untouched)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_subprocess(code: str) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_param_pspecs_divisibility_all_archs():
+    """Every full-size arch: specs fit shapes on the production mesh."""
+    from repro.config import get_config
+    from repro.configs import ASSIGNED_ARCHS
+    from repro.models.registry import build_model
+    from repro.sharding.partition import MeshAxes, param_pspecs
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16), dtype=object)
+
+    axes = MeshAxes(FakeMesh())
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        bundle = build_model(cfg)
+        shapes = bundle.params_shape()
+        specs = param_pspecs(shapes, cfg, axes)
+        for (path, sds), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(shapes)[0],
+            jax.tree_util.tree_flatten_with_path(specs)[0],
+        ):
+            for dim, ax in zip(sds.shape, tuple(spec)):
+                if ax is None:
+                    continue
+                size = axes.axis_size(ax)
+                assert dim % size == 0, (arch, jax.tree_util.keystr(path),
+                                         sds.shape, spec)
+
+
+def test_sharded_train_step_matches_single_device():
+    """Loss on an 8-device (data x model) mesh == single-device loss."""
+    code = r"""
+import json, numpy as np
+import jax, jax.numpy as jnp
+from repro.configs.llama32_3b import smoke
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import make_train_step, place_batch, place_params
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.sharding.partition import activation_sharder
+
+cfg = smoke().replace(dtype="float32", remat=False)
+mesh = make_host_mesh(4, 2)
+bundle = build_model(cfg, flash_blk=16)
+params = bundle.init_params(jax.random.key(0))
+rng = np.random.default_rng(0)
+toks = rng.integers(0, cfg.vocab_size, (8, 32))
+batch = {"tokens": jnp.asarray(toks, jnp.int32),
+         "labels": jnp.asarray(np.roll(toks, -1, 1), jnp.int32)}
+loss_single, _ = jax.jit(bundle.loss_fn)(params, batch)
+
+bundle2 = build_model(cfg, flash_blk=16)
+bundle2.model.shard_x = activation_sharder(mesh)
+p2 = place_params(mesh, cfg, params)
+b2 = place_batch(mesh, batch)
+loss_sharded, _ = jax.jit(bundle2.loss_fn)(p2, b2)
+
+opt = AdamW(AdamWConfig())
+step = make_train_step(bundle2, opt, mesh)
+opt_state = opt.init(p2)
+p3, opt_state, _, metrics = step(p2, opt_state, {"none": jnp.zeros(())}, b2)
+print(json.dumps({
+    "loss_single": float(loss_single),
+    "loss_sharded": float(loss_sharded),
+    "step_loss": float(metrics["loss"]),
+    "n_dev": len(jax.devices()),
+}))
+"""
+    res = _run_subprocess(code)
+    assert res["n_dev"] == 8
+    np.testing.assert_allclose(res["loss_sharded"], res["loss_single"], rtol=2e-4)
+    np.testing.assert_allclose(res["step_loss"], res["loss_single"], rtol=2e-4)
+
+
+def test_sharded_xtime_engine_matches_single_device():
+    """CAM rows over `model`, batch over `data`: psum == local sum."""
+    code = r"""
+import json, numpy as np
+import jax
+from repro.core.compile import compile_ensemble
+from repro.core.engine import XTimeEngine
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import train_gbdt, GBDTParams
+from repro.data.tabular import make_dataset
+from repro.launch.mesh import make_host_mesh
+
+ds = make_dataset("eye")
+q = FeatureQuantizer.fit(ds.x_train, 256)
+xb = q.transform(ds.x_train)[:64]
+ens = train_gbdt(q.transform(ds.x_train), ds.y_train, task="multiclass",
+                 n_bins=256, n_classes=ds.n_classes,
+                 params=GBDTParams(n_rounds=4, max_leaves=32))
+table = compile_ensemble(ens)
+mesh = make_host_mesh(2, 4)
+e1 = XTimeEngine(table, backend="jnp")
+e2 = XTimeEngine(table, backend="jnp", mesh=mesh)
+m1 = np.asarray(e1.raw_margin(xb))
+m2 = np.asarray(e2.raw_margin(xb))
+print(json.dumps({"maxerr": float(np.abs(m1-m2).max()),
+                  "n_dev": len(jax.devices())}))
+"""
+    res = _run_subprocess(code)
+    assert res["n_dev"] == 8
+    assert res["maxerr"] < 1e-4
+
+
+def test_batch_replicated_noc_config_matches():
+    """Input-batching config (Fig. 7c): table replicated, batch over all
+    axes — same numbers as the accumulate config."""
+    code = r"""
+import json, numpy as np
+from repro.core.compile import compile_ensemble
+from repro.core.engine import XTimeEngine
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import train_gbdt, GBDTParams
+from repro.data.tabular import make_dataset
+from repro.launch.mesh import make_host_mesh
+
+ds = make_dataset("churn")
+q = FeatureQuantizer.fit(ds.x_train, 256)
+xb = q.transform(ds.x_train)[:64]
+ens = train_gbdt(q.transform(ds.x_train), ds.y_train, task="binary",
+                 n_bins=256, params=GBDTParams(n_rounds=3, max_leaves=16))
+table = compile_ensemble(ens)
+mesh = make_host_mesh(2, 4)
+e1 = XTimeEngine(table, backend="jnp")
+e2 = XTimeEngine(table, backend="jnp", mesh=mesh, noc_config="batch")
+m1 = np.asarray(e1.raw_margin(xb))
+m2 = np.asarray(e2.raw_margin(xb))
+print(json.dumps({"maxerr": float(np.abs(m1-m2).max())}))
+"""
+    res = _run_subprocess(code)
+    assert res["maxerr"] < 1e-4

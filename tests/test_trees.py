@@ -1,0 +1,82 @@
+"""Tree-training substrate: learns, is deterministic, respects constraints."""
+
+import numpy as np
+import pytest
+
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, RFParams, train_gbdt, train_rf
+from repro.data.tabular import accuracy_metric, make_dataset
+
+
+@pytest.fixture(scope="module")
+def churn():
+    ds = make_dataset("churn")
+    q = FeatureQuantizer.fit(ds.x_train, n_bins=256)
+    return ds, q, q.transform(ds.x_train), q.transform(ds.x_test)
+
+
+def test_gbdt_beats_majority_binary(churn):
+    ds, q, xb_tr, xb_te = churn
+    ens = train_gbdt(xb_tr, ds.y_train, task="binary", n_bins=256,
+                     params=GBDTParams(n_rounds=30, max_leaves=64))
+    acc = accuracy_metric("binary", ds.y_test, ens.predict(xb_te))
+    base = max(np.mean(ds.y_test), 1 - np.mean(ds.y_test))
+    assert acc > base + 0.03, (acc, base)
+
+
+def test_gbdt_multiclass_and_leaf_constraints():
+    ds = make_dataset("eye")
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    xb_tr, xb_te = q.transform(ds.x_train), q.transform(ds.x_test)
+    ens = train_gbdt(xb_tr, ds.y_train, task="multiclass", n_bins=256,
+                     n_classes=ds.n_classes,
+                     params=GBDTParams(n_rounds=10, max_leaves=32, max_depth=6))
+    acc = accuracy_metric("multiclass", ds.y_test, ens.predict(xb_te))
+    assert acc > 1.0 / ds.n_classes + 0.1
+    assert ens.max_leaves <= 32
+    assert all(t.max_depth <= 6 for t in ens.trees)
+    assert ens.n_trees == 10 * ds.n_classes
+
+
+def test_gbdt_regression_r2():
+    ds = make_dataset("rossmann")
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    xb_tr, xb_te = q.transform(ds.x_train), q.transform(ds.x_test)
+    ens = train_gbdt(xb_tr, ds.y_train, task="regression", n_bins=256,
+                     params=GBDTParams(n_rounds=30, max_leaves=64, learning_rate=0.2))
+    r2 = accuracy_metric("regression", ds.y_test, ens.predict(xb_te))
+    assert r2 > 0.25, r2
+
+
+def test_rf_classification(churn):
+    ds, q, xb_tr, xb_te = churn
+    rf = train_rf(xb_tr, ds.y_train, task="binary", n_bins=256,
+                  params=RFParams(n_trees=20, max_leaves=64, colsample=0.7))
+    acc = accuracy_metric("binary", ds.y_test, rf.predict(xb_te))
+    base = max(np.mean(ds.y_test), 1 - np.mean(ds.y_test))
+    assert acc > base, (acc, base)
+
+
+def test_training_deterministic(churn):
+    ds, q, xb_tr, _ = churn
+    p = GBDTParams(n_rounds=3, max_leaves=16, subsample=0.8, seed=7)
+    a = train_gbdt(xb_tr, ds.y_train, task="binary", n_bins=256, params=p)
+    b = train_gbdt(xb_tr, ds.y_train, task="binary", n_bins=256, params=p)
+    for ta, tb in zip(a.trees, b.trees):
+        np.testing.assert_array_equal(ta.feature, tb.feature)
+        np.testing.assert_array_equal(ta.threshold, tb.threshold)
+        np.testing.assert_array_equal(ta.value, tb.value)
+
+
+def test_quantizer_bin_float_consistency():
+    """bin(x) < t  <=>  x < edges[t-1] — the trainer/CAM convention."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(2000, 4)).astype(np.float32)
+    q = FeatureQuantizer.fit(x, n_bins=64)
+    xb = q.transform(x)
+    for f in range(4):
+        for t in (1, 5, 30):
+            if t - 1 >= len(q.edges[f]):
+                continue
+            thr = q.threshold_value(f, t)
+            np.testing.assert_array_equal(xb[:, f] < t, x[:, f] < thr)

@@ -1,0 +1,59 @@
+"""Hyperparameter search (§IV-A workflow): constraint compliance, monotone
+best-so-far, improvement over an untuned default, determinism."""
+
+import numpy as np
+import pytest
+
+from repro.core.compile import compile_ensemble, pack_cores
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, train_gbdt
+from repro.core.tune import HWConstraints, random_search
+from repro.data.tabular import accuracy_metric, make_dataset
+
+
+@pytest.fixture(scope="module")
+def search():
+    ds = make_dataset("churn")
+    return ds, random_search(ds, kind="gbdt", n_trials=8, seed=3)
+
+
+def test_constraints_respected(search):
+    ds, res = search
+    hw = HWConstraints()
+    for t in res.trials:
+        assert t.n_trees <= hw.max_trees
+        assert t.max_leaves <= hw.max_leaves
+    # and the winner compiles + places on the chip
+    table = compile_ensemble(res.ensemble)
+    plc = pack_cores(table)
+    assert plc.n_cores_used <= plc.spec.n_cores
+
+
+def test_best_is_max_of_trials(search):
+    ds, res = search
+    assert res.best.valid_score == max(t.valid_score for t in res.trials)
+
+
+def test_tuned_beats_weak_default(search):
+    """Paper workflow sanity: search should beat a deliberately weak
+    configuration on the test split."""
+    ds, res = search
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    weak = train_gbdt(
+        q.transform(ds.x_train), ds.y_train, task=ds.task, n_bins=256,
+        params=GBDTParams(n_rounds=3, max_leaves=4, learning_rate=0.02),
+    )
+    weak_acc = accuracy_metric(ds.task, ds.y_test, weak.predict(q.transform(ds.x_test)))
+    tuned_acc = accuracy_metric(
+        ds.task, ds.y_test,
+        res.ensemble.predict(res.quantizer.transform(ds.x_test)),
+    )
+    assert tuned_acc > weak_acc
+
+
+def test_search_deterministic():
+    ds = make_dataset("telco")
+    a = random_search(ds, kind="gbdt", n_trials=3, seed=9)
+    b = random_search(ds, kind="gbdt", n_trials=3, seed=9)
+    assert [t.valid_score for t in a.trials] == [t.valid_score for t in b.trials]
+    assert a.best.params == b.best.params
