@@ -18,6 +18,7 @@ def main() -> None:
         fig10_latency_throughput,
         fig11_scaling,
         kernel_bench,
+        serve_bench,
         tableI_precision,
     )
 
@@ -29,6 +30,7 @@ def main() -> None:
         ("fig9_accuracy", fig9_accuracy),
         ("fig9b_defects", fig9b_defects),
         ("fig10_latency_throughput", fig10_latency_throughput),
+        ("serve_bench", serve_bench),
     ]
     print("name,us_per_call,derived")
     failures = 0

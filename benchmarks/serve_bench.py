@@ -1,0 +1,87 @@
+"""Serving-layer benchmark: requests/sec of the micro-batching ServeLoop
+vs per-request ``XTimeEngine.predict`` at request batch size 1, swept over
+the coalescing depth (rows per flush).
+
+The per-request baseline is what the repo could do before ``repro.serve``
+existed: every single-row request pays one dispatch of a ``b_blk``-padded
+batch.  Coalescing N requests into one bucket amortizes both the dispatch
+and the CAM sweep, which is precisely the input-batching argument of
+§III-D — the acceptance bar for this PR is >= 5x at coalesce depth 256.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import budget, trained_model
+from repro.core.compile import compile_ensemble
+from repro.core.engine import XTimeEngine
+from repro.serve import ServeLoop, TableRegistry
+
+COALESCE_DEPTHS = (16, 64, 256)
+
+
+def _request_stream(xb_te: np.ndarray, n: int) -> np.ndarray:
+    reps = int(np.ceil(n / len(xb_te)))
+    return np.tile(xb_te, (reps, 1))[:n].astype(np.int32)
+
+
+def _per_request_baseline(eng: XTimeEngine, stream: np.ndarray) -> float:
+    """Requests/sec of one synchronous predict() per single-row request."""
+    np.asarray(eng.predict(stream[:1]))  # compile
+    t0 = time.perf_counter()
+    for row in stream:
+        np.asarray(eng.predict(row[None, :]))
+    return len(stream) / (time.perf_counter() - t0)
+
+
+def _served(reg: TableRegistry, stream: np.ndarray, depth: int) -> tuple[float, "object"]:
+    loop = ServeLoop(reg, window_s=10.0, flush_rows=depth, max_batch=1024)
+    # warm the bucket cache (full bucket + the drain remainder bucket)
+    for row in stream[:depth]:
+        loop.submit("bench", row)
+    loop.drain()
+    loop = ServeLoop(reg, window_s=10.0, flush_rows=depth, max_batch=1024)
+    t0 = time.perf_counter()
+    for row in stream:
+        loop.submit("bench", row)
+    loop.drain()
+    rps = len(stream) / (time.perf_counter() - t0)
+    return rps, loop.stats("bench")
+
+
+def run() -> list[dict]:
+    ens, q, ds, xb_te = trained_model("churn", "8bit", "gbdt")
+    table = compile_ensemble(ens)
+    n_req = budget(2048, 512)
+    stream = _request_stream(xb_te, n_req)
+
+    reg = TableRegistry()
+    reg.register("bench", table)
+    base_rps = _per_request_baseline(reg.engine("bench"), stream)
+
+    rows = [{
+        "name": "serve/per_request_baseline",
+        "us_per_call": 1e6 / base_rps,
+        "derived": f"requests_per_s={base_rps:.0f};coalesce=1",
+    }]
+    for depth in COALESCE_DEPTHS:
+        rps, stats = _served(reg, stream, depth)
+        rows.append({
+            "name": f"serve/microbatch_c{depth}",
+            "us_per_call": 1e6 / rps,
+            "derived": (
+                f"requests_per_s={rps:.0f};coalesce={depth};"
+                f"speedup_vs_per_request={rps / base_rps:.1f}x;"
+                f"p50_ms={stats.p50_ms:.2f};p99_ms={stats.p99_ms:.2f};"
+                f"flushes={stats.n_flushes}"
+            ),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

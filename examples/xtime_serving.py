@@ -1,69 +1,94 @@
-"""X-TIME as an inference service: batched tabular requests through the
-CAM engine, all four NoC programs (§III-D), and the analog-defect
-robustness study (Fig. 9b) on a live model.
+"""X-TIME as an inference SERVICE: three models live in one
+``TableRegistry``, single-row requests stream through the micro-batching
+``ServeLoop``, and the measured p50/p99 latency is reported next to the
+paper's analytic chip numbers.  The defect study (Fig. 9b) becomes a
+hot-swap demo: defective tables are swapped in under the same model name
+while the loop keeps serving.
 
 Run:  PYTHONPATH=src python examples/xtime_serving.py
 """
 
 import numpy as np
 
-from repro.core.compile import compile_ensemble, pack_cores
 from repro.core.defects import inject_table_defects, relative_accuracy
-from repro.core.engine import XTimeEngine
 from repro.core.noc import plan_noc
-from repro.core.perfmodel import xtime_perf
 from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import GBDTParams, train_gbdt
 from repro.data.tabular import accuracy_metric, make_dataset
+from repro.serve import ServeLoop, TableRegistry
+
+
+def _train(name: str, n_rounds: int = 30):
+    ds = make_dataset(name)
+    quant = FeatureQuantizer.fit(ds.x_train, 256)
+    ens = train_gbdt(
+        quant.transform(ds.x_train), ds.y_train, task=ds.task, n_bins=256,
+        n_classes=ds.n_classes,
+        params=GBDTParams(n_rounds=n_rounds, max_leaves=64),
+    )
+    return ds, quant, ens
 
 
 def main() -> None:
-    for name, label, batching in (("rossmann", "regression", False),
-                                  ("eye", "multiclass", False),
-                                  ("telco", "binary + input batching", True)):
-        ds = make_dataset(name)
-        q = FeatureQuantizer.fit(ds.x_train, 256)
-        ens = train_gbdt(
-            q.transform(ds.x_train), ds.y_train, task=ds.task, n_bins=256,
-            n_classes=ds.n_classes,
-            params=GBDTParams(n_rounds=30, max_leaves=64),
-        )
-        table = compile_ensemble(ens)
-        plc = pack_cores(table)
-        noc = plan_noc(table, plc, batching=batching)
-        label = f"{label} ({noc.config} NoC)"
-        eng = XTimeEngine(table, backend="jnp", noc_config=noc.engine_noc_config
-                          if noc.engine_noc_config != "batch" else "accumulate")
-        xb = q.transform(ds.x_test)
-        pred = np.asarray(eng.predict(xb))
-        acc = accuracy_metric(ds.task, ds.y_test, pred)
-        rep = xtime_perf(table, plc, noc)
-        print(f"{name:10s} {label:30s} acc={acc:.4f} "
-              f"router_bits={''.join(map(str, noc.router_bits))} "
-              f"tput={rep.throughput_msps:,.0f} MS/s "
-              f"energy={rep.energy_nj_per_dec:.2f} nJ/dec")
+    registry = TableRegistry()
+    loop = ServeLoop(registry, window_s=0.001, flush_rows=256)
 
-    # defect robustness on the live multiclass service
-    ds = make_dataset("eye")
-    q = FeatureQuantizer.fit(ds.x_train, 256)
-    ens = train_gbdt(q.transform(ds.x_train), ds.y_train, task="multiclass",
-                     n_bins=256, n_classes=ds.n_classes,
-                     params=GBDTParams(n_rounds=20, max_leaves=64))
-    table = compile_ensemble(ens)
-    xb = q.transform(ds.x_test)
-    ideal = accuracy_metric("multiclass", ds.y_test,
-                            np.asarray(XTimeEngine(table).predict(xb)))
-    print("\ndefect robustness (memristor 1-level flips):")
+    datasets = {}
+    for name, batching in (("rossmann", False), ("eye", False), ("telco", True)):
+        ds, quant, ens = _train(name)
+        entry = registry.register(name, ens, batching=batching)
+        noc = plan_noc(entry.table, entry.placement, batching=batching)
+        datasets[name] = (ds, quant)
+        print(f"[register] {name:10s} v{entry.version} "
+              f"{entry.table.n_rows} CAM rows, {noc.config} NoC "
+              f"router_bits={''.join(map(str, noc.router_bits))}")
+
+    # single-row request traffic, round-robin over the three models
+    streams = {
+        name: quant.transform(ds.x_test).astype(np.int32)
+        for name, (ds, quant) in datasets.items()
+    }
+    handles: dict[str, list] = {name: [] for name in streams}
+    n_req = min(512, min(len(x) for x in streams.values()))
+    for i in range(n_req):
+        for name, xb in streams.items():
+            handles[name].append(loop.submit(name, xb[i]))
+    loop.drain()
+
+    print(f"\n[serve] {3 * n_req} single-row requests:")
+    for name, (ds, quant) in datasets.items():
+        pred = np.concatenate([loop.result(h) for h in handles[name]])
+        acc = accuracy_metric(ds.task, ds.y_test[:n_req], pred)
+        rep = loop.report(name)
+        m, c = rep["measured"], rep["xtime_chip_model"]
+        print(f"  {name:10s} acc={acc:.4f} p50={m['p50_ms']:.2f}ms "
+              f"p99={m['p99_ms']:.2f}ms {m['requests_per_s']:,.0f} req/s "
+              f"({m['flushes']} flushes) | chip model: "
+              f"{c['latency_ns']:.0f} ns, {c['throughput_msps']:,.0f} MS/s, "
+              f"{c['energy_nj_per_dec']:.2f} nJ/dec [{c['bottleneck']}]")
+
+    # defect robustness as hot-swap: serve the eye model with memristor
+    # flips injected, swapping tables under live traffic (Fig. 9b)
+    ds, quant = datasets["eye"]
+    xb = quant.transform(ds.x_test).astype(np.int32)
+    clean_table = registry.get("eye").table
+    h = loop.submit("eye", xb[:256])
+    loop.drain()
+    ideal = accuracy_metric("multiclass", ds.y_test[:256], loop.result(h))
+    print("\n[hot-swap] defect robustness on the live 'eye' service:")
     for frac in (0.002, 0.02, 0.1):
         accs = []
         for r in range(5):
-            t2 = inject_table_defects(table, frac, np.random.default_rng(r))
-            accs.append(accuracy_metric(
-                "multiclass", ds.y_test,
-                np.asarray(XTimeEngine(t2).predict(xb))))
+            t2 = inject_table_defects(clean_table, frac, np.random.default_rng(r))
+            entry = registry.swap("eye", t2)
+            h = loop.submit("eye", xb[:256])
+            loop.drain()
+            pred = loop.result(h)
+            accs.append(accuracy_metric("multiclass", ds.y_test[:256], pred))
         mean, std = relative_accuracy(ideal, accs)
         print(f"  {frac:5.1%} defects -> relative accuracy "
-              f"{mean:.4f} +/- {std:.4f}")
+              f"{mean:.4f} +/- {std:.4f} (now v{entry.version})")
+    registry.swap("eye", clean_table)
 
 
 if __name__ == "__main__":

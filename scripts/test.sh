@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 test runner. Pins the environment every contributor and CI box
+# needs so mesh tests behave identically everywhere:
+#   * 8 fake host devices (sharding/serving tests build small meshes;
+#     subprocess-based tests set their own flags and are unaffected),
+#   * CPU platform (deterministic; the Pallas kernel runs interpret=True),
+#   * src/ on PYTHONPATH (the repo is not installed in dev images).
+# Usage: bash scripts/test.sh [pytest args...], e.g.
+#   bash scripts/test.sh tests/test_serving.py -k bucket
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -x -q "$@"

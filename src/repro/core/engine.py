@@ -13,6 +13,7 @@ contract (tested in tests/test_engine.py).
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Callable
 
@@ -146,9 +147,10 @@ class XTimeEngine:
 
         return margin
 
-    def _jitted(self, key: str) -> Callable:
-        if key in self._fn_cache:
-            return self._fn_cache[key]
+    def _jitted(self, key: str, donate: bool = False) -> Callable:
+        cache_key = (key, donate)
+        if cache_key in self._fn_cache:
+            return self._fn_cache[cache_key]
         margin = self._margin_fn()
         want_pred = key == "predict"
         table = self.table
@@ -163,14 +165,19 @@ class XTimeEngine:
                 return (m[:, 0] > 0.0).astype(jnp.int32)
             return jnp.argmax(m, axis=1).astype(jnp.int32)
 
+        # The serving path donates the query buffer: each coalesced batch is
+        # a freshly padded array that is dead after the call, so XLA may
+        # reuse its storage (free on backends without donation support).
+        donate_kw = {"donate_argnums": (0,)} if donate else {}
         if self.mesh is not None:
             bs = NamedSharding(self.mesh, self._batch_spec())
             rs = NamedSharding(self.mesh, self._row_spec())
             out_s = NamedSharding(self.mesh, self._batch_spec())
-            jfn = jax.jit(fn, in_shardings=(bs, rs, rs, rs), out_shardings=out_s)
+            jfn = jax.jit(fn, in_shardings=(bs, rs, rs, rs), out_shardings=out_s,
+                          **donate_kw)
         else:
-            jfn = jax.jit(fn)
-        self._fn_cache[key] = jfn
+            jfn = jax.jit(fn, **donate_kw)
+        self._fn_cache[cache_key] = jfn
         return jfn
 
     def _prep_queries(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
@@ -192,6 +199,76 @@ class XTimeEngine:
         q = self._prep_queries(q_bins)
         a = self.arrays
         return self._jitted("predict")(q, a.low, a.high, a.leaf)[:B]
+
+    # -- bucketed serving path ----------------------------------------------
+
+    @property
+    def batch_multiple(self) -> int:
+        """Smallest batch granularity a serving bucket must respect.
+
+        The Pallas kernel tiles the batch in ``b_blk`` blocks, so its
+        buckets must be ``b_blk`` multiples; the jnp/XLA oracle accepts any
+        batch, letting the serving layer use power-of-two buckets below
+        ``b_blk``.  A mesh additionally requires the batch axis to divide
+        evenly across its batch shards.
+        """
+        mult = self.b_blk if self.backend == "pallas" else 1
+        if self.mesh is not None:
+            shards = self.mesh.shape[self.batch_axis]
+            if "pod" in self.mesh.axis_names:
+                shards *= self.mesh.shape["pod"]
+            if self.noc_config == "batch":
+                shards *= self.mesh.shape[self.row_axis]
+            mult = max(mult, shards)
+        return mult
+
+    def padded_fn(self, kind: str = "predict") -> Callable:
+        """Bucket-aware jitted entry for the serving layer.
+
+        Returns a callable of one pre-padded ``(bucket_b, f_pad)`` int32
+        query block (see ``kops.pad_to_bucket``) that yields the FULL
+        padded output — the caller owns un-padding.  ``jax.jit``
+        specializes once per bucket shape, so a shape-bucketed request
+        stream compiles ``O(log max_batch)`` variants instead of one per
+        request size.  The query buffer is donated (dead after the call).
+        """
+        if kind not in ("predict", "margin"):
+            raise ValueError(f"unknown kind {kind!r}")
+        jfn = self._jitted(kind, donate=True)
+        a = self.arrays
+
+        def run(q_padded: jnp.ndarray) -> jnp.ndarray:
+            if q_padded.ndim != 2 or q_padded.shape[1] != a.f_pad:
+                raise ValueError(
+                    f"expected (_, {a.f_pad}) padded queries, got {q_padded.shape}"
+                )
+            if q_padded.shape[0] % self.batch_multiple:
+                raise ValueError(
+                    f"bucket {q_padded.shape[0]} not a multiple of "
+                    f"batch_multiple={self.batch_multiple}"
+                )
+            if self.mesh is not None:
+                q_padded = jax.device_put(
+                    q_padded, NamedSharding(self.mesh, self._batch_spec())
+                )
+            with warnings.catch_warnings():
+                # int32 queries can never alias the float32 outputs (and CPU
+                # lacks donation entirely); donation still releases the
+                # buffer early on TPU, so keep it but drop the noise.
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable"
+                )
+                return jfn(q_padded, a.low, a.high, a.leaf)
+
+        return run
+
+    def predict_padded(self, q_padded: jnp.ndarray) -> jnp.ndarray:
+        """``predict`` on a pre-padded bucket; returns padded outputs."""
+        return self.padded_fn("predict")(q_padded)
+
+    def raw_margin_padded(self, q_padded: jnp.ndarray) -> jnp.ndarray:
+        """``raw_margin`` on a pre-padded bucket; returns padded outputs."""
+        return self.padded_fn("margin")(q_padded)
 
     # -- dry-run hooks -------------------------------------------------------
 

@@ -52,9 +52,28 @@ def pad_tables(
 
 
 def pad_queries(q: np.ndarray | jnp.ndarray, f_pad: int, b_blk: int = 128) -> jnp.ndarray:
+    B, _ = q.shape
+    return pad_to_bucket(q, _ceil_to(B, b_blk), f_pad)
+
+
+def pad_to_bucket(
+    q: np.ndarray | jnp.ndarray, bucket_b: int, f_pad: int
+) -> jnp.ndarray:
+    """Pad a coalesced query batch to an explicit serving-bucket shape.
+
+    Batch rows beyond ``B`` are zero vectors — they produce garbage margins
+    that the serving un-padder discards; feature columns beyond ``F`` are
+    zero, which the always-match column padding of ``pad_tables`` ignores.
+    Keeping the target shape explicit (instead of the next ``b_blk``
+    multiple) is what lets the serving layer hit one ``jax.jit`` cache
+    entry per bucket rather than one per request shape.
+    """
     B, F = q.shape
-    B_pad = _ceil_to(B, b_blk)
-    out = jnp.zeros((B_pad, f_pad), dtype=jnp.int32)
+    if B > bucket_b:
+        raise ValueError(f"batch {B} exceeds bucket {bucket_b}")
+    if F > f_pad:
+        raise ValueError(f"features {F} exceed padded width {f_pad}")
+    out = jnp.zeros((bucket_b, f_pad), dtype=jnp.int32)
     return out.at[:B, :F].set(q.astype(jnp.int32))
 
 

@@ -10,6 +10,18 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    # jax >= 0.5 takes explicit axis_types (we want Auto everywhere);
+    # 0.4.x has no AxisType and its make_mesh is Auto-only already.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = (
+        {"axis_types": (axis_type.Auto,) * len(axes)}
+        if axis_type is not None
+        else {}
+    )
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod stacks 2 pods (512 chips).
 
@@ -20,9 +32,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int | None = None, n_model: int | None = None):
@@ -36,7 +46,4 @@ def make_host_mesh(n_data: int | None = None, n_model: int | None = None):
                 n_model = m
                 n_data = n // m
                 break
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((n_data, n_model), ("data", "model"))

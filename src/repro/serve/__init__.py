@@ -1,0 +1,20 @@
+"""Production serving layer over the X-TIME CAM engine (DESIGN.md §6).
+
+    TableRegistry  — compile/hold/hot-swap many named ensembles, one mesh
+    MicroBatcher   — shape-bucketed request coalescing per engine
+    ServeLoop      — synchronous driver with p50/p99 latency accounting
+"""
+
+from repro.serve.batching import BucketSpec, MicroBatcher
+from repro.serve.loop import LatencyStats, RequestRecord, ServeLoop
+from repro.serve.registry import ServedModel, TableRegistry
+
+__all__ = [
+    "BucketSpec",
+    "LatencyStats",
+    "MicroBatcher",
+    "RequestRecord",
+    "ServeLoop",
+    "ServedModel",
+    "TableRegistry",
+]

@@ -1,0 +1,141 @@
+"""Multi-model table registry for the serving engine.
+
+One serving process holds MANY compiled ensembles (one per customer table
+/ model version) on one device mesh.  The registry owns the
+ensemble -> CAMTable -> XTimeEngine pipeline plus the chip-side placement
+artifacts (``pack_cores`` / ``plan_noc`` / ``xtime_perf``) so the serve
+loop can report measured latency against the paper's analytic numbers for
+the exact same model mapping.
+
+Hot swap: re-registering a name atomically replaces its engine and bumps
+the version; in-flight flushes keep the old engine object (Python
+reference semantics) and the next flush picks up the new table — no
+draining or locking needed in the synchronous loop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from jax.sharding import Mesh
+
+from repro.core.compile import CAMTable, ChipSpec, compile_ensemble, pack_cores
+from repro.core.engine import XTimeEngine
+from repro.core.noc import NoCPlan, plan_noc
+from repro.core.perfmodel import PerfReport, xtime_perf
+from repro.core.trees import Ensemble
+
+
+@dataclass
+class ServedModel:
+    """One registry entry: the live engine plus its chip-model artifacts."""
+
+    name: str
+    version: int
+    table: CAMTable
+    engine: XTimeEngine
+    placement: object  # CorePlacement
+    noc: NoCPlan
+    perf: PerfReport  # analytic chip numbers for this exact mapping
+    batching: bool = False  # retained across hot swaps
+    engine_overrides: dict | None = None  # retained across hot swaps
+
+
+class TableRegistry:
+    """Compile, hold and hot-swap named ensembles sharing one mesh."""
+
+    def __init__(
+        self,
+        *,
+        mesh: Mesh | None = None,
+        chip_spec: ChipSpec | None = None,
+        **engine_kwargs,
+    ) -> None:
+        self.mesh = mesh
+        self.chip_spec = chip_spec
+        self.engine_kwargs = engine_kwargs
+        self._models: dict[str, ServedModel] = {}
+
+    # -- registration --------------------------------------------------------
+
+    def register(
+        self,
+        name: str,
+        model: Ensemble | CAMTable,
+        *,
+        batching: bool | None = None,
+        **engine_overrides,
+    ) -> ServedModel:
+        """Compile (if needed) and install ``model`` under ``name``.
+
+        Registering an existing name is the hot-swap path: the entry is
+        replaced atomically and its version incremented.  Settings from
+        the previous registration (``batching``, engine overrides) carry
+        over unless explicitly overridden, so a swap changes the TABLE,
+        not the serving configuration.
+        """
+        prev = self._models.get(name)
+        if batching is None:
+            batching = prev.batching if prev is not None else False
+        if prev is not None:
+            engine_overrides = {**prev.engine_overrides, **engine_overrides}
+        table = model if isinstance(model, CAMTable) else compile_ensemble(model)
+        placement = pack_cores(table, self.chip_spec)
+        noc = plan_noc(table, placement, batching=batching)
+        kwargs = {**self.engine_kwargs, **engine_overrides}
+        # 'batch' replication is a chip-side concept; the engine's mesh
+        # analogue is still the accumulate collective (see noc.py).
+        noc_cfg = noc.engine_noc_config
+        if noc_cfg == "batch" and self.mesh is None:
+            noc_cfg = "accumulate"
+        engine = XTimeEngine(table, mesh=self.mesh, noc_config=noc_cfg, **kwargs)
+        version = self.version(name) + 1
+        entry = ServedModel(
+            name=name,
+            version=version,
+            table=table,
+            engine=engine,
+            placement=placement,
+            noc=noc,
+            perf=xtime_perf(table, placement, noc),
+            batching=batching,
+            engine_overrides=dict(engine_overrides),
+        )
+        self._models[name] = entry
+        return entry
+
+    def swap(self, name: str, model: Ensemble | CAMTable, **kw) -> ServedModel:
+        """Hot-swap: like ``register`` but the name must already exist."""
+        if name not in self._models:
+            raise KeyError(f"cannot swap unknown model {name!r}")
+        return self.register(name, model, **kw)
+
+    def unregister(self, name: str) -> None:
+        del self._models[name]
+
+    # -- lookup --------------------------------------------------------------
+
+    def get(self, name: str) -> ServedModel:
+        try:
+            return self._models[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown model {name!r}; registered: {sorted(self._models)}"
+            ) from None
+
+    def engine(self, name: str) -> XTimeEngine:
+        return self.get(name).engine
+
+    def version(self, name: str) -> int:
+        """Current version of ``name`` (0 if never registered)."""
+        entry = self._models.get(name)
+        return entry.version if entry is not None else 0
+
+    def names(self) -> list[str]:
+        return sorted(self._models)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._models
+
+    def __len__(self) -> int:
+        return len(self._models)

@@ -1,0 +1,68 @@
+"""Property-testing shim: real ``hypothesis`` when installed, a minimal
+seeded-random fallback otherwise.
+
+``hypothesis`` is a declared dev dependency (pyproject.toml), but the
+tier-1 suite must COLLECT and run in images that ship only the runtime
+stack.  The fallback implements exactly the subset this repo uses —
+``@given`` with ``st.integers`` keyword strategies and ``@settings`` —
+drawing ``max_examples`` samples from a fixed-seed Generator (no
+shrinking, no database; deterministic by construction).
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly when hypothesis exists
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _IntStrategy:
+        def __init__(self, min_value: int, max_value: int) -> None:
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def draw(self, rng: "np.random.Generator") -> int:
+            return int(rng.integers(self.min_value, self.max_value + 1))
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+    def settings(*, max_examples: int = 20, **_ignored):
+        """Records ``max_examples`` on the (possibly @given-wrapped) test."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0)
+                n = getattr(wrapper, "_max_examples", 20)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            # hide the strategy params from pytest's fixture resolution,
+            # exactly as real hypothesis does
+            params = [
+                p
+                for name, p in inspect.signature(fn).parameters.items()
+                if name not in strats
+            ]
+            wrapper.__signature__ = inspect.Signature(params)
+            return wrapper
+
+        return deco

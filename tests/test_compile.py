@@ -7,7 +7,7 @@ of that tree matches (the leaves partition bin space).  This is what makes
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.compile import ChipSpec, compile_ensemble, pack_cores, padded_table
 from repro.core.quantize import FeatureQuantizer

@@ -28,8 +28,12 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_analysis import analyze
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(2, 4)
+
+def _cost(compiled):
+    ca = compiled.cost_analysis()  # dict on jax >= 0.5, [dict] on 0.4.x
+    return ca[0] if isinstance(ca, list) else (ca or {})
 
 def body(x, w):
     return jnp.tanh(x @ w), None
@@ -55,7 +59,7 @@ a_unroll = analyze(cu.as_text())
 print(json.dumps({
     "scan_flops": a_scan.dot_flops,
     "unroll_flops": a_unroll.dot_flops,
-    "xla_unroll_flops": float(cu.cost_analysis().get("flops", -1)),
+    "xla_unroll_flops": float(_cost(cu).get("flops", -1)),
     "trips": a_scan.trip_counts,
     "expected": float(L * 16 * d * (d // 4) * 2),
 }))
@@ -75,8 +79,8 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_analysis import analyze
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(2, 4)
 
 def fn(x, ws):
     def body(h, w):

@@ -1,0 +1,262 @@
+"""Serving layer: bucket selection, un-pad/reorder correctness against the
+direct engine path, registry hot-swap, and the padded engine entry."""
+
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core.compile import compile_ensemble
+from repro.core.engine import XTimeEngine
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, train_gbdt
+from repro.data.tabular import make_dataset
+from repro.kernels import ops as kops
+from repro.serve import BucketSpec, MicroBatcher, ServeLoop, TableRegistry
+
+
+@pytest.fixture(scope="module")
+def served_binary():
+    ds = make_dataset("churn")
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    ens = train_gbdt(
+        q.transform(ds.x_train), ds.y_train, task="binary", n_bins=256,
+        params=GBDTParams(n_rounds=8, max_leaves=32),
+    )
+    return ens, q.transform(ds.x_test).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def served_multiclass():
+    ds = make_dataset("eye")
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    ens = train_gbdt(
+        q.transform(ds.x_train), ds.y_train, task="multiclass", n_bins=256,
+        n_classes=ds.n_classes,
+        params=GBDTParams(n_rounds=6, max_leaves=32),
+    )
+    return ens, q.transform(ds.x_test).astype(np.int32)
+
+
+# -- bucket selection ---------------------------------------------------------
+
+
+def test_bucket_sizes_pow2_then_blk_multiples():
+    spec = BucketSpec(b_blk=128, max_batch=512, multiple=1)
+    assert spec.sizes() == [1, 2, 4, 8, 16, 32, 64, 128, 256, 384, 512]
+
+
+def test_bucket_sizes_respect_batch_multiple():
+    # pallas-style engines admit only b_blk multiples
+    spec = BucketSpec(b_blk=128, max_batch=384, multiple=128)
+    assert spec.sizes() == [128, 256, 384]
+    assert spec.select(1) == 128
+
+
+def test_bucket_select_exact_boundary():
+    spec = BucketSpec(b_blk=128, max_batch=512, multiple=1)
+    assert spec.select(64) == 64  # exact bucket stays put
+    assert spec.select(65) == 128  # one over rolls to the next
+    assert spec.select(128) == 128
+    assert spec.select(129) == 256
+    assert spec.select(512) == 512
+
+
+def test_bucket_multiple_larger_than_b_blk():
+    # 16x16 production mesh with the 'batch' NoC config: 256 batch shards
+    spec = BucketSpec(b_blk=128, max_batch=1024, multiple=256)
+    assert spec.sizes() == [256, 512, 768, 1024]
+    assert spec.select(1) == 256
+    assert spec.select(257) == 512
+    assert spec.select(2000) == 2048  # over-max fallback keeps the lcm step
+    with pytest.raises(ValueError):
+        BucketSpec(b_blk=128, max_batch=128, multiple=256)  # max < lcm
+
+
+def test_bucket_select_over_max_fallback(caplog):
+    spec = BucketSpec(b_blk=128, max_batch=256, multiple=1)
+    with caplog.at_level(logging.WARNING, logger="repro.serve.batching"):
+        assert spec.select(300) == 384  # next b_blk multiple, uncached
+    assert any("uncached bucket" in r.message for r in caplog.records)
+    with pytest.raises(ValueError):
+        spec.select(0)
+
+
+def test_pad_to_bucket_contract():
+    q = np.arange(6, dtype=np.int32).reshape(2, 3)
+    out = np.asarray(kops.pad_to_bucket(q, 4, 8))
+    assert out.shape == (4, 8)
+    np.testing.assert_array_equal(out[:2, :3], q)
+    assert (out[2:] == 0).all() and (out[:, 3:] == 0).all()
+    with pytest.raises(ValueError):
+        kops.pad_to_bucket(q, 1, 8)
+    with pytest.raises(ValueError):
+        kops.pad_to_bucket(q, 4, 2)
+
+
+# -- micro-batch == direct engine --------------------------------------------
+
+
+def test_microbatch_results_equal_direct_predict(served_binary):
+    ens, xb = served_binary
+    eng = XTimeEngine(compile_ensemble(ens))
+    mb = MicroBatcher.for_engine(eng, max_batch=256)
+    sizes = [1, 3, 1, 7, 2, 1, 17, 1]
+    chunks, ids, row = [], [], 0
+    for s in sizes:
+        chunk = xb[row : row + s]
+        ids.append(mb.submit(chunk))
+        chunks.append(chunk)
+        row += s
+    results = mb.flush()
+    assert mb.pending_requests == 0
+    for rid, chunk in zip(ids, chunks):
+        np.testing.assert_array_equal(
+            results[rid], np.asarray(eng.predict(chunk))
+        )
+
+
+def test_microbatch_margin_kind_matches_raw_margin(served_multiclass):
+    ens, xb = served_multiclass
+    eng = XTimeEngine(compile_ensemble(ens))
+    mb = MicroBatcher.for_engine(eng, max_batch=256, kind="margin")
+    a = mb.submit(xb[:5])
+    b = mb.submit(xb[5:12])
+    out = mb.flush()
+    # bucket shape changes XLA's accumulation order -> float-level jitter
+    np.testing.assert_allclose(
+        out[a], np.asarray(eng.raw_margin(xb[:5])), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        out[b], np.asarray(eng.raw_margin(xb[5:12])), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_padded_fn_equals_predict_per_bucket(served_binary):
+    ens, xb = served_binary
+    eng = XTimeEngine(compile_ensemble(ens))
+    direct = np.asarray(eng.predict(xb[:37]))
+    for bucket in (64, 128):
+        qp = kops.pad_to_bucket(xb[:37], bucket, eng.arrays.f_pad)
+        out = np.asarray(eng.predict_padded(qp))
+        assert out.shape[0] == bucket
+        np.testing.assert_array_equal(out[:37], direct)
+
+
+def test_padded_fn_rejects_bad_shapes(served_binary):
+    ens, xb = served_binary
+    eng = XTimeEngine(compile_ensemble(ens))
+    with pytest.raises(ValueError):
+        eng.predict_padded(xb[:4])  # unpadded feature width
+    with pytest.raises(ValueError):
+        eng.padded_fn("nope")
+
+
+# -- serve loop ---------------------------------------------------------------
+
+
+def test_serve_loop_single_row_traffic(served_binary):
+    ens, xb = served_binary
+    reg = TableRegistry()
+    reg.register("m", ens)
+    loop = ServeLoop(reg, window_s=100.0, flush_rows=32)
+    handles = [loop.submit("m", xb[i]) for i in range(50)]
+    loop.drain()
+    got = np.concatenate([loop.result(h) for h in handles])
+    np.testing.assert_array_equal(got, np.asarray(reg.engine("m").predict(xb[:50])))
+    s = loop.stats("m")
+    assert s.n_requests == 50 and s.n_rows == 50
+    assert s.n_flushes == 2  # 32-row bucket + 18-row drain
+    assert s.p99_ms >= s.p50_ms >= 0.0
+    assert s.requests_per_s > 0
+
+
+def test_serve_loop_window_expiry_flushes():
+    t = [0.0]
+    ds = make_dataset("churn")
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    ens = train_gbdt(
+        q.transform(ds.x_train), ds.y_train, task="binary", n_bins=256,
+        params=GBDTParams(n_rounds=4, max_leaves=16),
+    )
+    reg = TableRegistry()
+    reg.register("m", ens)
+    loop = ServeLoop(reg, window_s=1.0, flush_rows=1000, clock=lambda: t[0])
+    xb = q.transform(ds.x_test).astype(np.int32)
+    h = loop.submit("m", xb[0])
+    assert loop.poll() == 0  # window not expired, nothing flushed
+    t[0] = 2.0
+    assert loop.poll() == 1  # expiry forces the flush
+    assert loop.result(h).shape == (1,)
+
+
+def test_registry_hot_swap(served_binary, served_multiclass):
+    ens_a, xb = served_binary
+    reg = TableRegistry()
+    assert reg.version("m") == 0
+    reg.register("m", ens_a)
+    assert reg.version("m") == 1 and "m" in reg and reg.names() == ["m"]
+
+    # swap in a retrained model (different table) under live traffic
+    ds = make_dataset("churn")
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    ens_b = train_gbdt(
+        q.transform(ds.x_train), ds.y_train, task="binary", n_bins=256,
+        params=GBDTParams(n_rounds=3, max_leaves=16),
+    )
+    loop = ServeLoop(reg, window_s=100.0, flush_rows=64)
+    h_old = loop.submit("m", xb[:8])
+    reg.swap("m", ens_b)
+    assert reg.version("m") == 2
+    h_new = loop.submit("m", xb[:8])  # old pending flushed through old engine
+    loop.drain()
+    np.testing.assert_array_equal(
+        loop.result(h_old), np.asarray(XTimeEngine(compile_ensemble(ens_a)).predict(xb[:8]))
+    )
+    np.testing.assert_array_equal(
+        loop.result(h_new), np.asarray(XTimeEngine(compile_ensemble(ens_b)).predict(xb[:8]))
+    )
+
+    with pytest.raises(KeyError):
+        reg.swap("ghost", ens_b)
+    reg.unregister("m")
+    assert "m" not in reg and reg.version("m") == 0
+    with pytest.raises(KeyError):
+        reg.get("m")
+
+
+def test_submit_copies_caller_buffer(served_binary):
+    ens, xb = served_binary
+    eng = XTimeEngine(compile_ensemble(ens))
+    mb = MicroBatcher.for_engine(eng, max_batch=256)
+    buf = xb[0].copy()
+    rid = mb.submit(buf)
+    expected = np.asarray(eng.predict(xb[:1]))
+    buf[:] = 0  # caller reuses its buffer before the flush
+    np.testing.assert_array_equal(mb.flush()[rid], expected)
+
+
+def test_swap_retains_serving_configuration(served_binary):
+    ens, _ = served_binary
+    reg = TableRegistry()
+    a = reg.register("m", ens, batching=True)
+    assert a.batching and a.noc.config == "batch"
+    b = reg.swap("m", ens)  # no batching arg: must inherit, not reset
+    assert b.batching and b.noc.config == "batch"
+    assert b.version == 2
+    c = reg.register("m", ens, batching=False)  # explicit override wins
+    assert not c.batching and c.noc.config != "batch"
+
+
+def test_serve_report_includes_chip_model(served_binary):
+    ens, xb = served_binary
+    reg = TableRegistry()
+    reg.register("m", ens)
+    loop = ServeLoop(reg, window_s=100.0, flush_rows=16)
+    for i in range(20):
+        loop.submit("m", xb[i])
+    loop.drain()
+    rep = loop.report("m")
+    assert rep["measured"]["requests"] == 20
+    assert rep["xtime_chip_model"]["throughput_msps"] > 0
+    assert rep["xtime_chip_model"]["latency_ns"] > 0
