@@ -7,11 +7,10 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import budget, time_call, trained_model
+from repro.api import build
 from repro.core.baselines import TraversalBaseline
-from repro.core.compile import compile_ensemble, pack_cores
-from repro.core.engine import XTimeEngine
-from repro.core.noc import plan_noc
-from repro.core.perfmodel import booster_perf, gpu_perf_model, xtime_perf
+from repro.core.deploy import DeployConfig
+from repro.core.perfmodel import booster_perf, gpu_perf_model
 
 DATASETS = ["churn", "eye", "telco", "rossmann"]
 
@@ -20,14 +19,14 @@ def run() -> list[dict]:
     rows = []
     for name in DATASETS:
         ens, q, ds, xb_te = trained_model(name, "8bit", "gbdt")
-        table = compile_ensemble(ens)
-        plc = pack_cores(table)
-        noc = plan_noc(table, plc)
+        # batching=True: the paper's Fig. 10 protocol replicates small
+        # models across core groups (§III-D), multiplying throughput
+        cm = build(ens, deploy=DeployConfig(batching=True))
         depth = int(max(t.max_depth for t in ens.trees))
 
-        xt = xtime_perf(table, plc, noc)
+        xt = cm.perf
         gp = gpu_perf_model(n_trees=ens.n_trees, depth=depth)
-        bo = booster_perf(table, plc, noc, depth=depth)
+        bo = booster_perf(cm.table, cm.placement, cm.noc, depth=depth)
         rows.append({
             "name": f"fig10/{name}/model",
             "us_per_call": xt.latency_ns / 1e3,
@@ -44,7 +43,7 @@ def run() -> list[dict]:
         # measured on THIS machine: one CAM match op vs O(D) gathers
         b = budget(4096, 1024)
         xb = np.tile(xb_te, (int(np.ceil(b / len(xb_te))), 1))[:b]
-        eng = XTimeEngine(table, backend="jnp")
+        eng = cm.engine()
         trav = TraversalBaseline(ens)
         t_eng = time_call(lambda a: eng.raw_margin(a).block_until_ready(), xb)
         t_trav = time_call(lambda a: trav.raw_margin(a).block_until_ready(), xb)

@@ -26,7 +26,7 @@ def run() -> list[dict]:
         y = ds.y_test[:512]
         table = compile_ensemble(ens)
         ideal = accuracy_metric(
-            ds.task, y, np.asarray(XTimeEngine(table, backend="jnp").predict(xb))
+            ds.task, y, np.asarray(XTimeEngine(table).predict(xb))
         )
         for frac in FRACS:
             accs = []
@@ -34,7 +34,7 @@ def run() -> list[dict]:
                 rng = np.random.default_rng(1000 * r + 7)
                 t2 = inject_table_defects(table, frac, rng)
                 q2 = inject_query_defects(xb.astype(np.int32), frac, 256, rng)
-                pred = np.asarray(XTimeEngine(t2, backend="jnp").predict(q2))
+                pred = np.asarray(XTimeEngine(t2).predict(q2))
                 accs.append(accuracy_metric(ds.task, y, pred))
             mean, std = relative_accuracy(ideal, accs)
             rows.append({

@@ -16,7 +16,7 @@ import time
 import numpy as np
 
 from benchmarks.common import budget, trained_model
-from repro.core.compile import compile_ensemble
+from repro.api import build
 from repro.core.engine import XTimeEngine
 from repro.serve import ServeLoop, TableRegistry
 
@@ -54,12 +54,12 @@ def _served(reg: TableRegistry, stream: np.ndarray, depth: int) -> tuple[float, 
 
 def run() -> list[dict]:
     ens, q, ds, xb_te = trained_model("churn", "8bit", "gbdt")
-    table = compile_ensemble(ens)
+    artifact = build(ens)  # compile once; the registry installs it as-is
     n_req = budget(2048, 512)
     stream = _request_stream(xb_te, n_req)
 
     reg = TableRegistry()
-    reg.register("bench", table)
+    reg.register("bench", artifact)
     base_rps = _per_request_baseline(reg.engine("bench"), stream)
 
     rows = [{

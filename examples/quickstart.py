@@ -1,18 +1,21 @@
 """Quickstart: the complete X-TIME pipeline from the paper (Fig. 7d).
 
-    dataset -> train GBDT -> 8-bit quantize -> compile to CAM rows ->
-    place on cores -> program the NoC -> run the engine -> chip report
+    dataset -> train GBDT -> 8-bit quantize -> repro.api.build (compile to
+    CAM rows + place on cores + program the NoC + chip report) ->
+    save/load the portable artifact -> bind the engine -> predictions
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+import tempfile
+from pathlib import Path
+
 import numpy as np
 
+from repro.api import CompiledModel, build
 from repro.core.baselines import TraversalBaseline
-from repro.core.compile import compile_ensemble, pack_cores
-from repro.core.engine import XTimeEngine
-from repro.core.noc import plan_noc
-from repro.core.perfmodel import gpu_perf_model, xtime_perf
+from repro.core.deploy import DeployConfig
+from repro.core.perfmodel import gpu_perf_model
 from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import GBDTParams, train_gbdt
 from repro.data.tabular import accuracy_metric, make_dataset
@@ -33,27 +36,33 @@ def main() -> None:
     print(f"[train]   {ens.n_trees} trees, max {ens.max_leaves} leaves, "
           f"test acc {acc:.4f}")
 
-    # 3. compile: every root-to-leaf path -> one CAM row of [low, high) ranges
-    table = compile_ensemble(ens)
-    print(f"[compile] {table.n_rows} CAM rows x {table.n_features} features, "
-          f"{table.dont_care_fraction():.0%} don't-care cells")
+    # 3. compile ONCE into the deployable artifact: CAM rows, core
+    #    placement, NoC router program, analytic chip report, exec config
+    #    (batching=True: replicate the small model across cores, §III-D)
+    cm = build(ens, deploy=DeployConfig(backend="jnp", batching=True))
+    print(f"[build]   {cm.table.n_rows} CAM rows x {cm.table.n_features} "
+          f"features, {cm.table.dont_care_fraction():.0%} don't-care cells")
+    print(f"[place]   {cm.placement.n_cores_used} cores, "
+          f"{cm.placement.max_trees_per_core} trees/core max, "
+          f"replication x{cm.placement.replication}, NoC '{cm.noc.config}'")
 
-    # 4. placement + NoC program (accumulate/forward/batch, §III-D)
-    placement = pack_cores(table)
-    noc = plan_noc(table, placement)
-    print(f"[place]   {placement.n_cores_used} cores, "
-          f"{placement.max_trees_per_core} trees/core max, "
-          f"replication x{placement.replication}, NoC config '{noc.config}'")
+    # 4. the artifact is the unit of deployment: npz + JSON sidecar,
+    #    reloadable on any host with no trainer and no recompilation
+    with tempfile.TemporaryDirectory() as tmp:
+        sidecar = cm.save(Path(tmp) / "churn")
+        loaded = CompiledModel.load(sidecar)
+        print(f"[save]    {sidecar.name} + churn.npz "
+              f"({sidecar.stat().st_size} B sidecar)")
 
-    # 5. inference: one associative match replaces D dependent gathers
-    engine = XTimeEngine(table, backend="jnp")
-    pred = np.asarray(engine.predict(xb_test))
-    ref = TraversalBaseline(ens).predict(xb_test)
-    print(f"[engine]  engine==traversal on {len(pred)} samples: "
-          f"{(pred == ref).all()}")
+        # 5. inference: one associative match replaces D dependent gathers
+        engine = loaded.engine()  # binds backend/mesh on demand
+        pred = np.asarray(engine.predict(xb_test))
+        ref = TraversalBaseline(ens).predict(xb_test)
+        print(f"[engine]  reloaded-artifact engine == traversal on "
+              f"{len(pred)} samples: {(pred == ref).all()}")
 
-    # 6. chip performance model (Eq. 4/5, Fig. 8 constants)
-    rep = xtime_perf(table, placement, noc)
+    # 6. chip performance model (Eq. 4/5, Fig. 8 constants) rides along
+    rep = cm.perf
     gpu = gpu_perf_model(n_trees=ens.n_trees, depth=8)
     print(f"[chip]    latency {rep.latency_ns:.0f} ns, throughput "
           f"{rep.throughput_msps:,.0f} MS/s, {rep.power_w:.1f} W, "

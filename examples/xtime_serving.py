@@ -1,17 +1,24 @@
-"""X-TIME as an inference SERVICE: three models live in one
-``TableRegistry``, single-row requests stream through the micro-batching
-``ServeLoop``, and the measured p50/p99 latency is reported next to the
-paper's analytic chip numbers.  The defect study (Fig. 9b) becomes a
-hot-swap demo: defective tables are swapped in under the same model name
-while the loop keeps serving.
+"""X-TIME as an inference SERVICE: three models are compiled once into
+portable ``CompiledModel`` artifacts (``repro.api.build``), written to
+disk, and a fresh ``TableRegistry`` cold-starts from those files — no
+trainer in the serve process, no recompilation.  Single-row requests
+stream through the micro-batching ``ServeLoop``, and the measured p50/p99
+latency is reported next to the paper's analytic chip numbers.  The
+defect study (Fig. 9b) becomes a hot-swap demo: defective tables are
+swapped in under the same model name while the loop keeps serving.
 
 Run:  PYTHONPATH=src python examples/xtime_serving.py
 """
 
+import shutil
+import tempfile
+from pathlib import Path
+
 import numpy as np
 
+from repro.api import CompiledModel, build
 from repro.core.defects import inject_table_defects, relative_accuracy
-from repro.core.noc import plan_noc
+from repro.core.deploy import DeployConfig
 from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import GBDTParams, train_gbdt
 from repro.data.tabular import accuracy_metric, make_dataset
@@ -30,18 +37,26 @@ def _train(name: str, n_rounds: int = 30):
 
 
 def main() -> None:
-    registry = TableRegistry()
-    loop = ServeLoop(registry, window_s=0.001, flush_rows=256)
-
+    # --- "trainer" process: compile each model once, ship the artifact ---
+    tmp = Path(tempfile.mkdtemp(prefix="xtime-artifacts-"))
     datasets = {}
     for name, batching in (("rossmann", False), ("eye", False), ("telco", True)):
         ds, quant, ens = _train(name)
-        entry = registry.register(name, ens, batching=batching)
-        noc = plan_noc(entry.table, entry.placement, batching=batching)
+        cm = build(ens, deploy=DeployConfig(batching=batching))
+        cm.save(tmp / name)
         datasets[name] = (ds, quant)
-        print(f"[register] {name:10s} v{entry.version} "
-              f"{entry.table.n_rows} CAM rows, {noc.config} NoC "
-              f"router_bits={''.join(map(str, noc.router_bits))}")
+        print(f"[build]    {name:10s} {cm.table.n_rows} CAM rows, "
+              f"{cm.noc.config} NoC "
+              f"router_bits={''.join(map(str, cm.noc.router_bits))} "
+              f"-> {name}.npz+.json")
+
+    # --- serve process: cold-start the registry from disk artifacts ---
+    registry = TableRegistry()
+    loop = ServeLoop(registry, window_s=0.001, flush_rows=256)
+    for name in datasets:
+        entry = registry.register(name, CompiledModel.load(tmp / name))
+        print(f"[register] {name:10s} v{entry.version} from artifact "
+              f"(zero recompilation)")
 
     # single-row request traffic, round-robin over the three models
     streams = {
@@ -89,6 +104,7 @@ def main() -> None:
         print(f"  {frac:5.1%} defects -> relative accuracy "
               f"{mean:.4f} +/- {std:.4f} (now v{entry.version})")
     registry.swap("eye", clean_table)
+    shutil.rmtree(tmp, ignore_errors=True)
 
 
 if __name__ == "__main__":

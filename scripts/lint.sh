@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Static checks (no autofix): ruff over every Python tree in the repo.
+# CI installs ruff itself; locally it must already be on PATH.
+# Usage: bash scripts/lint.sh [extra ruff args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v ruff >/dev/null 2>&1; then
+    echo "error: ruff is not installed (pip install ruff)" >&2
+    exit 1
+fi
+
+exec ruff check src tests benchmarks examples scripts "$@"

@@ -1,11 +1,40 @@
 """repro — X-TIME (CAM-based tree-ensemble inference) rebuilt as a JAX framework.
 
 Public API surface:
+    repro.api        compiled-artifact API: ``build`` -> ``CompiledModel``
+                     (save/load/engine) + ``DeployConfig``
     repro.core       the paper's contribution (tree training, CAM compile, engine)
     repro.kernels    Pallas TPU kernels (cam_match) + jnp oracles
+    repro.serve      multi-model registry + micro-batching serve loop
     repro.models     LM substrate for the assigned architectures
     repro.configs    architecture registry (``get_config(name)``)
     repro.launch     mesh / dryrun / train / serve entry points
+
+The artifact names resolve lazily (PEP 562) so ``import repro`` stays
+dependency-free; ``repro.build(...)`` / ``repro.CompiledModel`` work
+without importing jax until an engine is bound.
 """
 
 __version__ = "1.0.0"
+
+_LAZY = {
+    "build": "repro.api",
+    "CompiledModel": "repro.api",
+    "DeployConfig": "repro.core.deploy",
+}
+
+
+def __getattr__(name: str):
+    import importlib
+
+    if name in _LAZY:
+        value = getattr(importlib.import_module(_LAZY[name]), name)
+        globals()[name] = value
+        return value
+    if name == "api":
+        return importlib.import_module("repro.api")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(_LAZY) | {"api"})

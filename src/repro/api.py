@@ -1,0 +1,270 @@
+"""Compiled-artifact API: ``build()`` -> portable ``CompiledModel``.
+
+The paper's deployment story is "compile the ensemble once, program the
+CAM chip, then serve" (§II-D, Fig. 7d).  ``build`` is that compile step
+as one call:
+
+    cm = repro.api.build(ensemble)          # or a pre-compiled CAMTable
+    cm.save("artifacts/churn")              # churn.npz + churn.json
+    ...
+    cm = CompiledModel.load("artifacts/churn")   # any host, no trainer
+    engine = cm.engine(mesh=mesh)           # bind to devices on demand
+
+``CompiledModel`` is the immutable unit of deployment — the CAM table,
+its core placement, the NoC router program, the analytic chip report and
+the ``DeployConfig`` execution knobs, together.  It serializes as an
+``.npz`` (integer range tables + float leaf values) plus a JSON sidecar
+(config / metadata / schema version), so a serve process cold-starts
+from disk without training deps or recompilation — the registry path
+(``repro.serve.TableRegistry.register(name, artifact)``).
+
+The engine import happens lazily inside ``CompiledModel.engine`` so that
+loading/inspecting artifacts never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.compile import (
+    CAMTable,
+    ChipSpec,
+    CorePlacement,
+    compile_ensemble,
+    pack_cores,
+)
+from repro.core.deploy import DeployConfig
+from repro.core.noc import NoCPlan, plan_noc
+from repro.core.perfmodel import PerfReport, xtime_perf
+from repro.core.trees import Ensemble
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.engine import XTimeEngine
+
+SCHEMA_VERSION = 1
+_FORMAT = "xtime-compiled-model"
+
+# the CAMTable arrays stored in the .npz payload
+_TABLE_ARRAYS = ("low", "high", "leaf", "tree_id", "class_id")
+_TABLE_META = (
+    "n_trees", "n_features", "n_bins", "n_outputs",
+    "task", "kind", "base_score", "n_classes",
+)
+
+
+@dataclass(frozen=True, eq=False)
+class CompiledModel:
+    """Immutable compiled artifact: everything between training and serving.
+
+    Attributes:
+      table: the compiled CAM rows (one per root-to-leaf path).
+      placement: tree -> core packing on the chip (``pack_cores``).
+      noc: H-tree router program + collective plan (``plan_noc``).
+      perf: analytic chip numbers for this exact mapping (``xtime_perf``).
+      deploy: execution knobs; ``engine()`` binds them to a backend/mesh.
+    """
+
+    table: CAMTable
+    placement: CorePlacement
+    noc: NoCPlan
+    perf: PerfReport
+    deploy: DeployConfig
+
+    def __post_init__(self) -> None:
+        # per-instance engine cache (frozen dataclass => set via object)
+        object.__setattr__(self, "_engines", {})
+
+    @property
+    def chip(self) -> ChipSpec:
+        return self.placement.spec
+
+    # -- execution binding ---------------------------------------------------
+
+    def resolved_deploy(self, mesh=None, **overrides) -> DeployConfig:
+        """The effective config an engine binds: ``overrides`` applied, then
+        'auto' noc_config resolved from the compiled NoC plan ('batch'
+        degrades to 'accumulate' without a mesh to replicate over)."""
+        if "batching" in overrides:
+            # a build-time knob: it changes the router program, not the
+            # engine binding — silently ignoring it here would serve the
+            # stale NoC plan
+            raise ValueError(
+                "'batching' is fixed at build time; use "
+                "with_deploy(deploy.replace(batching=...)) to replan the NoC"
+            )
+        cfg = self.deploy.replace(**overrides) if overrides else self.deploy
+        if cfg.noc_config == "auto":
+            noc_cfg = self.noc.engine_noc_config
+            if noc_cfg == "batch" and mesh is None:
+                noc_cfg = "accumulate"
+            cfg = cfg.replace(noc_config=noc_cfg)
+        return cfg
+
+    def engine(self, mesh=None, **overrides) -> "XTimeEngine":
+        """Lazily bind this artifact to an ``XTimeEngine``.
+
+        Repeated calls with the same mesh/overrides return the same engine
+        (and therefore hit its jit cache); a different mesh or override set
+        binds a fresh one.  ``overrides`` are ``DeployConfig`` field
+        updates (e.g. ``backend='pallas'``, ``b_blk=256``).
+        """
+        key = (None if mesh is None else id(mesh),
+               tuple(sorted(overrides.items())))
+        cached = self._engines.get(key)
+        if cached is not None:
+            return cached
+        from repro.core.engine import XTimeEngine  # lazy: touches jax
+
+        eng = XTimeEngine.from_config(
+            self.table, self.resolved_deploy(mesh, **overrides), mesh=mesh
+        )
+        self._engines[key] = eng
+        return eng
+
+    def with_deploy(self, deploy: DeployConfig) -> "CompiledModel":
+        """Same compiled tables, different execution config.
+
+        Only the cheap chip-side plans are recomputed, and only when
+        ``batching`` changed (it alters the router program) — the CAM
+        table and core placement are reused as-is, never recompiled.
+        """
+        if deploy == self.deploy:
+            return self
+        if deploy.batching == self.deploy.batching:
+            return dataclasses.replace(self, deploy=deploy)
+        noc = plan_noc(self.table, self.placement, batching=deploy.batching)
+        perf = xtime_perf(self.table, self.placement, noc)
+        return dataclasses.replace(self, noc=noc, perf=perf, deploy=deploy)
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str | Path) -> Path:
+        """Write ``<base>.npz`` (tables) + ``<base>.json`` (sidecar).
+
+        ``path`` may be the bare base path or end in ``.npz``/``.json``.
+        Returns the sidecar path.
+        """
+        base = _base_path(path)
+        base.parent.mkdir(parents=True, exist_ok=True)
+        t = self.table
+        np.savez_compressed(
+            _sibling(base, ".npz"),
+            **{name: getattr(t, name) for name in _TABLE_ARRAYS},
+        )
+        sidecar = {
+            "format": _FORMAT,
+            "schema_version": SCHEMA_VERSION,
+            "table": {k: getattr(t, k) for k in _TABLE_META},
+            "chip": dataclasses.asdict(self.chip),
+            "placement": {
+                "core_trees": self.placement.core_trees,
+                "core_rows_used": self.placement.core_rows_used,
+                "n_feature_segments": self.placement.n_feature_segments,
+                "replication": self.placement.replication,
+            },
+            "noc": dataclasses.asdict(self.noc),
+            "perf": dataclasses.asdict(self.perf),
+            "deploy": self.deploy.to_dict(),
+        }
+        out = _sibling(base, ".json")
+        out.write_text(json.dumps(sidecar, indent=1))
+        return out
+
+    @classmethod
+    def load(cls, path: str | Path) -> "CompiledModel":
+        """Reconstruct an artifact saved by :meth:`save` — pure I/O plus
+        dataclass assembly, no compiler or training imports."""
+        base = _base_path(path)
+        sidecar = json.loads(_sibling(base, ".json").read_text())
+        if sidecar.get("format") != _FORMAT:
+            raise ValueError(
+                f"{base}: not a {_FORMAT} artifact "
+                f"(format={sidecar.get('format')!r})"
+            )
+        version = sidecar.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"{base}: artifact schema_version={version!r} is not the "
+                f"supported version {SCHEMA_VERSION}; re-run repro.api.build"
+            )
+        with np.load(_sibling(base, ".npz")) as npz:
+            arrays = {name: npz[name] for name in _TABLE_ARRAYS}
+        table = CAMTable(**arrays, **sidecar["table"])
+        chip = ChipSpec(**sidecar["chip"])
+        placement = CorePlacement(spec=chip, **sidecar["placement"])
+        noc_d = dict(sidecar["noc"])
+        noc_d["reduction_axes"] = tuple(noc_d["reduction_axes"])
+        noc = NoCPlan(**noc_d)
+        perf = PerfReport(**sidecar["perf"])
+        deploy = DeployConfig.from_dict(sidecar["deploy"])
+        return cls(
+            table=table, placement=placement, noc=noc, perf=perf, deploy=deploy
+        )
+
+    # -- introspection -------------------------------------------------------
+
+    def summary(self) -> dict:
+        """Human-facing one-stop description (examples / logs)."""
+        return {
+            "rows": self.table.n_rows,
+            "features": self.table.n_features,
+            "trees": self.table.n_trees,
+            "outputs": self.table.n_outputs,
+            "task": self.table.task,
+            "cores_used": self.placement.n_cores_used,
+            "replication": self.placement.replication,
+            "noc": self.noc.config,
+            "latency_ns": round(self.perf.latency_ns, 1),
+            "throughput_msps": round(self.perf.throughput_msps, 2),
+            "backend": self.deploy.backend,
+            "mode": self.deploy.mode,
+        }
+
+
+def _base_path(path: str | Path) -> Path:
+    p = Path(path)
+    if p.suffix in (".npz", ".json"):
+        return p.parent / p.name[: -len(p.suffix)]
+    return p
+
+
+def _sibling(base: Path, suffix: str) -> Path:
+    # not ``with_suffix``: a dotted base like 'churn.8bit' must keep its dot
+    return base.parent / (base.name + suffix)
+
+
+def build(
+    model: Ensemble | CAMTable,
+    *,
+    deploy: DeployConfig | None = None,
+    chip: ChipSpec | None = None,
+) -> CompiledModel:
+    """Compile ``model`` into a portable, serializable ``CompiledModel``.
+
+    The one-call replacement for the hand-wired ``compile_ensemble ->
+    pack_cores -> plan_noc -> xtime_perf -> XTimeEngine`` pipeline.
+    ``deploy.batching`` selects the §III-D input-batching router program;
+    ``chip`` overrides the architecture constants (defaults to the
+    paper's 4096-core chip).
+    """
+    deploy = deploy or DeployConfig()
+    if isinstance(model, CAMTable):
+        table = model
+    elif isinstance(model, Ensemble):
+        table = compile_ensemble(model)
+    else:
+        raise TypeError(
+            f"build() takes an Ensemble or CAMTable, got {type(model).__name__}"
+        )
+    placement = pack_cores(table, chip)
+    noc = plan_noc(table, placement, batching=deploy.batching)
+    perf = xtime_perf(table, placement, noc)
+    return CompiledModel(
+        table=table, placement=placement, noc=noc, perf=perf, deploy=deploy
+    )

@@ -3,6 +3,12 @@
 Pipeline:  train (trees.py)  ->  quantize (quantize.py)  ->  compile to CAM
 table (compile.py)  ->  inference engine (engine.py, kernels/cam_match.py)
 ->  NoC reduction (noc.py)  ->  chip performance model (perfmodel.py).
+
+``XTimeEngine`` / ``CompiledModel`` / ``build`` are exported lazily (PEP
+562): engine.py pulls in repro.kernels (which imports repro.core.precision
+back through this package), so resolving them on first attribute access —
+instead of at package import — keeps ``repro.kernels.ref`` -> ``repro.core``
+acyclic while still allowing ``from repro.core import XTimeEngine``.
 """
 
 from repro.core.trees import (  # noqa: F401
@@ -14,9 +20,32 @@ from repro.core.trees import (  # noqa: F401
     train_rf,
 )
 from repro.core.quantize import FeatureQuantizer  # noqa: F401
-from repro.core.compile import CAMTable, compile_ensemble, pack_cores  # noqa: F401
+from repro.core.compile import (  # noqa: F401
+    CAMTable,
+    ChipSpec,
+    CorePlacement,
+    compile_ensemble,
+    pack_cores,
+)
+from repro.core.deploy import DeployConfig  # noqa: F401
 
-# NOTE: XTimeEngine is intentionally NOT re-exported here — engine.py
-# depends on repro.kernels which depends on repro.core.precision; importing
-# it eagerly would make `repro.kernels.ref` -> `repro.core` circular.
-# Use `from repro.core.engine import XTimeEngine`.
+_LAZY = {
+    "XTimeEngine": "repro.core.engine",
+    "EngineArrays": "repro.core.engine",
+    "CompiledModel": "repro.api",
+    "build": "repro.api",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        value = getattr(importlib.import_module(_LAZY[name]), name)
+        globals()[name] = value  # cache: next access skips this hook
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(_LAZY))

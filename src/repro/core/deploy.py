@@ -1,0 +1,88 @@
+"""Unified deployment configuration: the ONE place execution knobs live.
+
+Every consumer of the engine used to re-thread the same loose kwargs
+(``backend``, ``mode``, ``b_blk``, ``r_blk``, ``noc_config``, mesh axes)
+through ``XTimeEngine``, the registry's engine kwargs, benchmarks and
+examples.  ``DeployConfig`` collects them into one frozen, serializable
+dataclass that travels INSIDE the compiled artifact (``repro.api.build``
+-> ``CompiledModel``), so a model saved on one host binds to an engine on
+another with identical execution semantics.
+
+``noc_config='auto'`` defers the collective choice to the compiled NoC
+plan (``NoCPlan.engine_noc_config``) at engine-bind time — the paper's
+router program decides, not the caller.  A bare engine with no plan
+resolves 'auto' to 'accumulate' (Fig. 7a), the universal-correctness
+config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+BACKENDS = ("jnp", "pallas")
+MODES = ("direct", "inclusive", "msb_lsb", "two_cycle")
+NOC_CONFIGS = ("auto", "accumulate", "batch")
+
+
+@dataclass(frozen=True)
+class DeployConfig:
+    """Execution knobs for a compiled model, independent of any device.
+
+    Attributes:
+      backend: 'jnp' (XLA-fused oracle, distributed default) or 'pallas'
+        (TPU kernel; ``interpret=True`` on CPU).
+      mode: aCAM cell comparison mode ('direct' | 'inclusive' |
+        'msb_lsb' | 'two_cycle').
+      noc_config: 'auto' resolves from the compiled ``NoCPlan``;
+        'accumulate' / 'batch' force the engine collective.
+      row_axis / batch_axis: mesh axis names for CAM-row sharding and
+        batch sharding (plus a leading 'pod' axis when present).
+      b_blk / r_blk: kernel batch/row tile sizes — also the padding
+        granularity of queries and CAM rows.
+      c_mult: leaf-channel padding multiple (kernel lane packing).
+      interpret: run the Pallas kernel in interpret mode (CPU).
+      batching: chip-side input batching (§III-D Fig. 7c) — replicate a
+        small model across core groups; feeds ``plan_noc`` at build time.
+    """
+
+    backend: str = "jnp"
+    mode: str = "direct"
+    noc_config: str = "auto"
+    row_axis: str = "model"
+    batch_axis: str = "data"
+    b_blk: int = 128
+    r_blk: int = 256
+    c_mult: int = 8
+    interpret: bool = True
+    batching: bool = False
+
+    def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.noc_config not in NOC_CONFIGS:
+            raise ValueError(
+                f"noc_config {self.noc_config!r} not in {NOC_CONFIGS}"
+            )
+        if self.b_blk < 1 or self.r_blk < 1 or self.c_mult < 1:
+            raise ValueError("b_blk, r_blk and c_mult must be >= 1")
+
+    # -- derivation ----------------------------------------------------------
+
+    def replace(self, **changes) -> "DeployConfig":
+        """A copy with ``changes`` applied (frozen-dataclass update)."""
+        return dataclasses.replace(self, **changes)
+
+    # -- (de)serialization ---------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DeployConfig":
+        """Rebuild from a JSON dict; unknown keys are ignored so minor
+        additive schema revisions stay loadable."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})

@@ -23,8 +23,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.compile import CAMTable
+from repro.core.deploy import DeployConfig
 from repro.kernels import ops as kops
 from repro.kernels.ref import cam_match_ref
+
+_UNSET = object()  # distinguishes "kwarg not passed" from an explicit default
 
 
 @dataclass
@@ -42,51 +45,83 @@ class XTimeEngine:
 
     Args:
       table: compiled ensemble.
-      backend: 'pallas' (TPU kernel; interpret=True on CPU) or 'jnp'
-        (XLA-fused oracle — the distributed default).
-      mode: cell comparison mode ('direct' | 'msb_lsb' | 'two_cycle').
+      config: a ``DeployConfig`` holding every execution knob — the
+        canonical construction path (``XTimeEngine.from_config`` /
+        ``CompiledModel.engine``).  'auto' noc_config resolves to
+        'accumulate' here; the artifact layer resolves it from the
+        compiled NoC plan before binding.
       mesh: optional jax Mesh. When given, rows are sharded over
-        ``row_axis`` and batch over ``batch_axis`` (+ leading 'pod' axis if
-        present), and the margin all-reduce maps the paper's NoC
-        accumulate config.
-      noc_config: 'accumulate' shards rows (regression/binary/multiclass —
-        the router sums partial margins); 'batch' replicates the table and
-        shards batch over every mesh axis (input batching with replicated
-        trees, §III-D Fig. 7c).
+        ``config.row_axis`` and batch over ``config.batch_axis`` (+
+        leading 'pod' axis if present), and the margin all-reduce maps
+        the paper's NoC accumulate config.
+
+    The loose keyword form (``backend=``, ``mode=``, ``b_blk=``, ...) is
+    deprecated: those knobs now live in ``DeployConfig``.  It still works
+    — the kwargs are folded into a config — but emits a
+    ``DeprecationWarning``.
     """
 
     def __init__(
         self,
         table: CAMTable,
         *,
-        backend: str = "jnp",
-        mode: str = "direct",
+        config: DeployConfig | None = None,
         mesh: Mesh | None = None,
-        row_axis: str = "model",
-        batch_axis: str = "data",
-        noc_config: str = "accumulate",
-        b_blk: int = 128,
-        r_blk: int = 256,
-        interpret: bool = True,
+        backend=_UNSET,
+        mode=_UNSET,
+        row_axis=_UNSET,
+        batch_axis=_UNSET,
+        noc_config=_UNSET,
+        b_blk=_UNSET,
+        r_blk=_UNSET,
+        c_mult=_UNSET,
+        interpret=_UNSET,
     ) -> None:
+        legacy = {
+            k: v
+            for k, v in (
+                ("backend", backend), ("mode", mode), ("row_axis", row_axis),
+                ("batch_axis", batch_axis), ("noc_config", noc_config),
+                ("b_blk", b_blk), ("r_blk", r_blk), ("c_mult", c_mult),
+                ("interpret", interpret),
+            )
+            if v is not _UNSET
+        }
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass execution knobs via config=DeployConfig(...) OR as "
+                    f"loose kwargs, not both (got config and {sorted(legacy)})"
+                )
+            warnings.warn(
+                "loose XTimeEngine execution kwargs are deprecated; pass "
+                "config=DeployConfig(...) or use repro.api.build(...).engine()",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = DeployConfig(**legacy)
+        config = config or DeployConfig()
+
         self.table = table
-        self.backend = backend
-        self.mode = mode
+        self.config = config
+        self.backend = config.backend
+        self.mode = config.mode
         self.mesh = mesh
-        self.row_axis = row_axis
-        self.batch_axis = batch_axis
-        self.noc_config = noc_config
-        self.b_blk = b_blk
-        self.r_blk = r_blk
-        self.interpret = interpret
+        self.row_axis = config.row_axis
+        self.batch_axis = config.batch_axis
+        noc_cfg = config.noc_config
+        self.noc_config = "accumulate" if noc_cfg == "auto" else noc_cfg
+        self.b_blk = config.b_blk
+        self.r_blk = config.r_blk
+        self.interpret = config.interpret
 
         # row padding must also be divisible by the row-shard count
-        row_mult = r_blk
-        if mesh is not None and noc_config == "accumulate":
-            row_mult = r_blk * mesh.shape[row_axis]
+        row_mult = self.r_blk
+        if mesh is not None and self.noc_config == "accumulate":
+            row_mult = self.r_blk * mesh.shape[self.row_axis]
         low, high, leaf = kops.pad_tables(
             table.low, table.high, table.leaf_matrix(),
-            r_blk=row_mult, c_mult=8, n_bins=table.n_bins,
+            r_blk=row_mult, c_mult=config.c_mult, n_bins=table.n_bins,
         )
         self.arrays = EngineArrays(
             low=jnp.asarray(low),
@@ -99,6 +134,16 @@ class XTimeEngine:
         if mesh is not None:
             self._place_on_mesh()
         self._fn_cache: dict = {}
+
+    @classmethod
+    def from_config(
+        cls, table: CAMTable, config: DeployConfig, *, mesh: Mesh | None = None
+    ) -> "XTimeEngine":
+        """Canonical constructor: bind a compiled table + deploy config to a
+        backend/mesh.  ``config.noc_config`` must already be resolved
+        ('auto' is treated as 'accumulate'); ``CompiledModel.engine``
+        resolves it from the NoC plan first."""
+        return cls(table, config=config, mesh=mesh)
 
     # -- placement ---------------------------------------------------------
 

@@ -1,6 +1,8 @@
-"""Production serving layer over the X-TIME CAM engine (DESIGN.md §6).
+"""Production serving layer over the X-TIME CAM engine (DESIGN.md §6-§7).
 
-    TableRegistry  — compile/hold/hot-swap many named ensembles, one mesh
+    TableRegistry  — hold/hot-swap many named models, one mesh; accepts a
+                     trained Ensemble, a CAMTable, or a CompiledModel
+                     artifact (disk cold-start, zero recompilation)
     MicroBatcher   — shape-bucketed request coalescing per engine
     ServeLoop      — synchronous driver with p50/p99 latency accounting
 """

@@ -218,10 +218,18 @@ class ServeLoop:
     def report(self, model: str) -> dict:
         """Measured serving stats side-by-side with the chip model."""
         s = self.stats(model)
-        perf = self.registry.get(model).perf
+        entry = self.registry.get(model)
+        perf = entry.perf
+        deploy = entry.deploy
         return {
             "model": model,
-            "version": self.registry.version(model),
+            "version": entry.version,
+            "deploy": {
+                "backend": deploy.backend,
+                "mode": deploy.mode,
+                "noc_config": entry.engine.noc_config,
+                "batching": entry.batching,
+            },
             "measured": {
                 "requests": s.n_requests,
                 "rows": s.n_rows,

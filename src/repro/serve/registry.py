@@ -1,59 +1,96 @@
 """Multi-model table registry for the serving engine.
 
-One serving process holds MANY compiled ensembles (one per customer table
-/ model version) on one device mesh.  The registry owns the
-ensemble -> CAMTable -> XTimeEngine pipeline plus the chip-side placement
-artifacts (``pack_cores`` / ``plan_noc`` / ``xtime_perf``) so the serve
-loop can report measured latency against the paper's analytic numbers for
-the exact same model mapping.
+One serving process holds MANY compiled models (one per customer table /
+model version) on one device mesh.  Each entry is a ``ServedModel``
+wrapped around a ``repro.api.CompiledModel`` artifact — the registry
+accepts a trained ``Ensemble`` (compiles it), a raw ``CAMTable`` (places
+it), or a ``CompiledModel`` loaded from disk (the cold-start path:
+installed as-is, zero recompilation, no training imports), and binds the
+artifact's ``DeployConfig`` to the registry's mesh.
 
 Hot swap: re-registering a name atomically replaces its engine and bumps
 the version; in-flight flushes keep the old engine object (Python
 reference semantics) and the next flush picks up the new table — no
-draining or locking needed in the synchronous loop.
+draining or locking needed in the synchronous loop.  Serving settings
+(``batching``, deploy overrides) carry over across swaps unless
+explicitly overridden, so a swap changes the TABLE, not the
+configuration.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 
 from jax.sharding import Mesh
 
-from repro.core.compile import CAMTable, ChipSpec, compile_ensemble, pack_cores
+from repro.api import CompiledModel, build
+from repro.core.compile import CAMTable, ChipSpec, CorePlacement
+from repro.core.deploy import DeployConfig
 from repro.core.engine import XTimeEngine
-from repro.core.noc import NoCPlan, plan_noc
-from repro.core.perfmodel import PerfReport, xtime_perf
+from repro.core.noc import NoCPlan
+from repro.core.perfmodel import PerfReport
 from repro.core.trees import Ensemble
 
 
 @dataclass
 class ServedModel:
-    """One registry entry: the live engine plus its chip-model artifacts."""
+    """One registry entry: the live engine around its compiled artifact."""
 
     name: str
     version: int
-    table: CAMTable
+    artifact: CompiledModel
     engine: XTimeEngine
-    placement: object  # CorePlacement
-    noc: NoCPlan
-    perf: PerfReport  # analytic chip numbers for this exact mapping
     batching: bool = False  # retained across hot swaps
-    engine_overrides: dict | None = None  # retained across hot swaps
+    engine_overrides: dict | None = field(default=None)  # retained across hot swaps
+
+    # artifact views (kept as properties so the artifact stays the single
+    # source of truth; ``entry.table`` etc. remain stable public names)
+
+    @property
+    def table(self) -> CAMTable:
+        return self.artifact.table
+
+    @property
+    def placement(self) -> CorePlacement:
+        return self.artifact.placement
+
+    @property
+    def noc(self) -> NoCPlan:
+        return self.artifact.noc
+
+    @property
+    def perf(self) -> PerfReport:
+        """Analytic chip numbers for this exact mapping."""
+        return self.artifact.perf
+
+    @property
+    def deploy(self) -> DeployConfig:
+        return self.artifact.deploy
 
 
 class TableRegistry:
-    """Compile, hold and hot-swap named ensembles sharing one mesh."""
+    """Compile/load, hold and hot-swap named models sharing one mesh."""
 
     def __init__(
         self,
         *,
         mesh: Mesh | None = None,
         chip_spec: ChipSpec | None = None,
+        deploy: DeployConfig | None = None,
         **engine_kwargs,
     ) -> None:
+        if engine_kwargs:
+            warnings.warn(
+                "loose TableRegistry engine kwargs are deprecated; pass "
+                "deploy=DeployConfig(...)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            deploy = (deploy or DeployConfig()).replace(**engine_kwargs)
         self.mesh = mesh
         self.chip_spec = chip_spec
-        self.engine_kwargs = engine_kwargs
+        self.deploy = deploy  # None => per-model defaults / artifact config
         self._models: dict[str, ServedModel] = {}
 
     # -- registration --------------------------------------------------------
@@ -61,57 +98,83 @@ class TableRegistry:
     def register(
         self,
         name: str,
-        model: Ensemble | CAMTable,
+        model: Ensemble | CAMTable | CompiledModel,
         *,
         batching: bool | None = None,
+        deploy: DeployConfig | None = None,
         **engine_overrides,
     ) -> ServedModel:
-        """Compile (if needed) and install ``model`` under ``name``.
+        """Install ``model`` under ``name`` (compiling only if needed).
 
-        Registering an existing name is the hot-swap path: the entry is
-        replaced atomically and its version incremented.  Settings from
-        the previous registration (``batching``, engine overrides) carry
-        over unless explicitly overridden, so a swap changes the TABLE,
-        not the serving configuration.
+        ``Ensemble`` / ``CAMTable`` inputs run the compiler pipeline via
+        ``repro.api.build``; a ``CompiledModel`` is installed as-is — the
+        serve cold-start path recompiles nothing.  Registering an existing
+        name is the hot-swap path: the entry is replaced atomically and
+        its version incremented, with the previous registration's
+        ``batching``/deploy settings carried over unless overridden.
+
+        ``engine_overrides`` (loose ``backend=...`` kwargs) are deprecated
+        in favor of ``deploy=DeployConfig(...)`` but still honored.
         """
+        if engine_overrides:
+            warnings.warn(
+                "loose register() engine kwargs are deprecated; pass "
+                "deploy=DeployConfig(...)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         prev = self._models.get(name)
+        if prev is not None and deploy is None:
+            # carry the previous loose overrides forward — but an explicit
+            # deploy= is a full reset, so stale kwargs must not outrank it
+            # (guard: manually constructed entries may carry overrides=None)
+            engine_overrides = {**(prev.engine_overrides or {}), **engine_overrides}
+
+        # base config precedence: explicit deploy > carried-over previous
+        # registration > the artifact's own config > registry default
+        if deploy is not None:
+            base = deploy
+        elif prev is not None:
+            base = prev.deploy
+        elif isinstance(model, CompiledModel):
+            base = model.deploy
+        else:
+            base = self.deploy or DeployConfig()
         if batching is None:
-            batching = prev.batching if prev is not None else False
-        if prev is not None:
-            engine_overrides = {**prev.engine_overrides, **engine_overrides}
-        table = model if isinstance(model, CAMTable) else compile_ensemble(model)
-        placement = pack_cores(table, self.chip_spec)
-        noc = plan_noc(table, placement, batching=batching)
-        kwargs = {**self.engine_kwargs, **engine_overrides}
-        # 'batch' replication is a chip-side concept; the engine's mesh
-        # analogue is still the accumulate collective (see noc.py).
-        noc_cfg = noc.engine_noc_config
-        if noc_cfg == "batch" and self.mesh is None:
-            noc_cfg = "accumulate"
-        engine = XTimeEngine(table, mesh=self.mesh, noc_config=noc_cfg, **kwargs)
-        version = self.version(name) + 1
+            batching = base.batching
+        cfg = base.replace(batching=batching, **engine_overrides)
+
+        if isinstance(model, CompiledModel):
+            artifact = model.with_deploy(cfg)  # never recompiles the table
+        else:
+            artifact = build(model, deploy=cfg, chip=self.chip_spec)
+
         entry = ServedModel(
             name=name,
-            version=version,
-            table=table,
-            engine=engine,
-            placement=placement,
-            noc=noc,
-            perf=xtime_perf(table, placement, noc),
+            version=self.version(name) + 1,
+            artifact=artifact,
+            engine=artifact.engine(mesh=self.mesh),
             batching=batching,
             engine_overrides=dict(engine_overrides),
         )
         self._models[name] = entry
         return entry
 
-    def swap(self, name: str, model: Ensemble | CAMTable, **kw) -> ServedModel:
+    def swap(
+        self, name: str, model: Ensemble | CAMTable | CompiledModel, **kw
+    ) -> ServedModel:
         """Hot-swap: like ``register`` but the name must already exist."""
         if name not in self._models:
             raise KeyError(f"cannot swap unknown model {name!r}")
         return self.register(name, model, **kw)
 
     def unregister(self, name: str) -> None:
-        del self._models[name]
+        try:
+            del self._models[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown model {name!r}; registered: {sorted(self._models)}"
+            ) from None
 
     # -- lookup --------------------------------------------------------------
 
@@ -125,6 +188,9 @@ class TableRegistry:
 
     def engine(self, name: str) -> XTimeEngine:
         return self.get(name).engine
+
+    def artifact(self, name: str) -> CompiledModel:
+        return self.get(name).artifact
 
     def version(self, name: str) -> int:
         """Current version of ``name`` (0 if never registered)."""

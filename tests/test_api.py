@@ -1,0 +1,340 @@
+"""Compiled-artifact API: build -> save -> load -> engine round trips,
+registry cold start from disk artifacts, schema versioning, and the
+DeployConfig deprecation shims."""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+import repro.api as api
+from repro.api import SCHEMA_VERSION, CompiledModel, build
+from repro.core.compile import ChipSpec, CorePlacement, compile_ensemble
+from repro.core.deploy import DeployConfig
+from repro.core.engine import XTimeEngine
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, RFParams, train_gbdt, train_rf
+from repro.data.tabular import make_dataset
+from repro.launch.mesh import make_host_mesh
+from repro.serve import ServedModel, ServeLoop, TableRegistry
+
+CELL_MODES = ("direct", "msb_lsb", "two_cycle")
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """One model per task shape: binary gbdt, multiclass gbdt, rf votes."""
+    out = {}
+    for key, (name, task, kind) in {
+        "binary": ("churn", "binary", "gbdt"),
+        "multiclass": ("eye", "multiclass", "gbdt"),
+        "rf": ("churn", "binary", "rf"),
+    }.items():
+        ds = make_dataset(name)
+        q = FeatureQuantizer.fit(ds.x_train, 256)
+        xb_tr, xb_te = q.transform(ds.x_train), q.transform(ds.x_test)
+        if kind == "gbdt":
+            ens = train_gbdt(xb_tr, ds.y_train, task=task, n_bins=256,
+                             n_classes=ds.n_classes,
+                             params=GBDTParams(n_rounds=4, max_leaves=32))
+        else:
+            ens = train_rf(xb_tr, ds.y_train, task=task, n_bins=256,
+                           n_classes=ds.n_classes,
+                           params=RFParams(n_trees=8, max_leaves=32))
+        out[key] = (ens, xb_te[:96].astype(np.int32))
+    return out
+
+
+# -- build ---------------------------------------------------------------------
+
+
+def test_build_bundles_whole_pipeline(trained):
+    ens, _ = trained["binary"]
+    cm = build(ens)
+    assert cm.table.n_rows == ens.total_leaves
+    assert cm.placement.n_cores_used >= 1
+    assert cm.noc.config in ("accumulate", "forward", "batch")
+    assert cm.perf.latency_ns > 0
+    assert cm.deploy == DeployConfig()
+    assert cm.chip is cm.placement.spec
+
+
+def test_build_accepts_camtable_and_rejects_junk(trained):
+    ens, _ = trained["binary"]
+    table = compile_ensemble(ens)
+    cm = build(table, deploy=DeployConfig(batching=True))
+    assert cm.table is table
+    assert cm.noc.config == "batch"  # §III-D input batching requested
+    with pytest.raises(TypeError):
+        build(np.zeros(3))
+
+
+def test_build_batching_alters_noc_only():
+    ds = make_dataset("churn")
+    q = FeatureQuantizer.fit(ds.x_train, 256)
+    ens = train_gbdt(q.transform(ds.x_train), ds.y_train, task="binary",
+                     n_bins=256, params=GBDTParams(n_rounds=3, max_leaves=16))
+    a = build(ens)
+    b = a.with_deploy(a.deploy.replace(batching=True))
+    assert b.table is a.table and b.placement is a.placement
+    assert b.noc.config == "batch" and a.noc.config != "batch"
+    # unchanged batching: pure config swap, plans reused
+    c = a.with_deploy(a.deploy.replace(mode="msb_lsb"))
+    assert c.noc is a.noc and c.perf is a.perf
+    assert a.with_deploy(a.deploy) is a
+
+
+# -- save / load / engine ------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", CELL_MODES)
+@pytest.mark.parametrize("key", ["binary", "multiclass", "rf"])
+def test_roundtrip_bit_equivalent(trained, key, mode, tmp_path):
+    """build -> save -> load -> engine reproduces Ensemble.raw_margin for
+    every cell mode and task shape; the reloaded engine is bit-identical
+    to the pre-save engine."""
+    ens, xb = trained[key]
+    cm = build(ens, deploy=DeployConfig(mode=mode))
+    loaded = CompiledModel.load(cm.save(tmp_path / f"{key}-{mode}"))
+
+    direct = np.asarray(cm.engine().raw_margin(xb))
+    reloaded = np.asarray(loaded.engine().raw_margin(xb))
+    np.testing.assert_array_equal(reloaded, direct)  # bit-equivalent
+    np.testing.assert_allclose(
+        reloaded, ens.raw_margin(xb), rtol=1e-4, atol=1e-5
+    )
+    if ens.task != "regression":
+        np.testing.assert_array_equal(
+            np.asarray(loaded.engine().predict(xb)), ens.predict(xb)
+        )
+
+
+def test_roundtrip_bit_equivalent_on_mesh(trained, tmp_path):
+    """The artifact binds to a sharded mesh engine after reload — the NoC
+    accumulate collective over 'model' keeps margins equal."""
+    ens, xb = trained["multiclass"]
+    mesh = make_host_mesh()
+    cm = build(ens)
+    loaded = CompiledModel.load(cm.save(tmp_path / "mesh"))
+    host = np.asarray(cm.engine().raw_margin(xb))
+    sharded = np.asarray(loaded.engine(mesh=mesh).raw_margin(xb))
+    np.testing.assert_allclose(sharded, host, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        sharded, ens.raw_margin(xb), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_roundtrip_property_random_queries(trained, tmp_path_factory, seed):
+    """Property: reload equivalence holds for ARBITRARY bin vectors."""
+    ens, _ = trained["binary"]
+    cm = build(ens)
+    base = tmp_path_factory.mktemp("prop") / "m"
+    loaded = CompiledModel.load(cm.save(base))
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 256, size=(17, ens.n_features)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.engine().raw_margin(q)),
+        np.asarray(cm.engine().raw_margin(q)),
+    )
+
+
+def test_save_load_path_forms(trained, tmp_path):
+    ens, _ = trained["binary"]
+    cm = build(ens)
+    sidecar = cm.save(tmp_path / "m.npz")  # suffix is normalized away
+    assert sidecar == tmp_path / "m.json"
+    for p in (tmp_path / "m", tmp_path / "m.npz", tmp_path / "m.json"):
+        assert CompiledModel.load(p).table.n_rows == cm.table.n_rows
+
+
+def test_load_preserves_plans_and_config(trained, tmp_path):
+    ens, _ = trained["multiclass"]
+    chip = ChipSpec(n_cores=512, n_stacked=4)
+    cm = build(ens, deploy=DeployConfig(mode="msb_lsb", b_blk=64), chip=chip)
+    loaded = CompiledModel.load(cm.save(tmp_path / "m"))
+    assert loaded.deploy == cm.deploy
+    assert loaded.chip == chip
+    assert loaded.placement.core_trees == cm.placement.core_trees
+    assert loaded.noc == cm.noc
+    assert loaded.perf == cm.perf
+
+
+def test_schema_version_mismatch_rejected(trained, tmp_path):
+    ens, _ = trained["binary"]
+    sidecar = build(ens).save(tmp_path / "m")
+    doc = json.loads(sidecar.read_text())
+    doc["schema_version"] = SCHEMA_VERSION + 1
+    sidecar.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="schema_version"):
+        CompiledModel.load(tmp_path / "m")
+    doc["format"] = "something-else"
+    sidecar.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="format"):
+        CompiledModel.load(tmp_path / "m")
+
+
+def test_engine_binding_is_cached(trained):
+    ens, _ = trained["binary"]
+    cm = build(ens)
+    assert cm.engine() is cm.engine()
+    assert cm.engine(mode="two_cycle") is not cm.engine()
+    assert cm.engine().mode == "direct"
+    assert cm.engine(mode="two_cycle").mode == "two_cycle"
+    # batching is a build-time knob (replans the NoC) — not an engine bind
+    with pytest.raises(ValueError, match="batching"):
+        cm.engine(batching=True)
+
+
+def test_auto_noc_resolution(trained):
+    ens, _ = trained["binary"]
+    cm = build(ens, deploy=DeployConfig(batching=True))
+    assert cm.noc.engine_noc_config == "batch"
+    # no mesh to replicate over -> degrade to the universal collective
+    assert cm.resolved_deploy(mesh=None).noc_config == "accumulate"
+    assert cm.resolved_deploy(mesh=make_host_mesh()).noc_config == "batch"
+
+
+# -- registry cold start -------------------------------------------------------
+
+
+def test_registry_cold_start_from_artifact(trained, tmp_path, monkeypatch):
+    """register(name, CompiledModel) must serve with ZERO recompilation —
+    the compiler entry points are poisoned to prove it."""
+    ens, xb = trained["binary"]
+    expected = np.asarray(build(ens).engine().predict(xb))
+    artifact = CompiledModel.load(build(ens).save(tmp_path / "cold"))
+
+    def _poisoned(*a, **kw):  # pragma: no cover - failure path
+        raise AssertionError("cold start must not recompile")
+
+    monkeypatch.setattr(api, "compile_ensemble", _poisoned)
+    monkeypatch.setattr(api, "pack_cores", _poisoned)
+    monkeypatch.setattr(api, "plan_noc", _poisoned)
+
+    reg = TableRegistry()
+    entry = reg.register("cold", artifact)
+    assert entry.artifact is artifact and entry.version == 1
+    assert isinstance(entry.placement, CorePlacement)
+    loop = ServeLoop(reg, window_s=100.0, flush_rows=16)
+    handles = [loop.submit("cold", xb[i]) for i in range(20)]
+    loop.drain()
+    got = np.concatenate([loop.result(h) for h in handles])
+    np.testing.assert_array_equal(got, expected[:20])
+    rep = loop.report("cold")
+    assert rep["deploy"]["backend"] == "jnp"
+
+
+def test_registry_artifact_hot_swap_keeps_settings(trained, tmp_path):
+    ens, xb = trained["binary"]
+    reg = TableRegistry()
+    a = reg.register("m", build(ens), batching=True)
+    assert a.batching and a.noc.config == "batch"
+    b = reg.swap("m", CompiledModel.load(a.artifact.save(tmp_path / "v2")))
+    assert b.version == 2 and b.batching and b.noc.config == "batch"
+
+
+def test_explicit_deploy_beats_carried_over_overrides(trained):
+    """A swap with deploy=DeployConfig(...) is a full config reset — stale
+    loose kwargs from the previous registration must not outrank it."""
+    ens, _ = trained["binary"]
+    reg = TableRegistry()
+    with pytest.warns(DeprecationWarning):
+        reg.register("m", ens, mode="msb_lsb")
+    entry = reg.register("m", ens, deploy=DeployConfig(mode="direct"))
+    assert entry.deploy.mode == "direct"
+    assert entry.engine.mode == "direct"
+    # the reset config is what carries over on subsequent swaps
+    entry = reg.register("m", ens)
+    assert entry.deploy.mode == "direct" and entry.engine_overrides == {}
+
+
+def test_registry_unregister_unknown_is_helpful(trained):
+    reg = TableRegistry()
+    with pytest.raises(KeyError, match="unknown model 'nope'; registered"):
+        reg.unregister("nope")
+
+
+def test_register_tolerates_manual_entry_without_overrides(trained):
+    """Hot-swap over a hand-rolled ServedModel with engine_overrides=None
+    must not crash on the carry-over merge."""
+    ens, _ = trained["binary"]
+    reg = TableRegistry()
+    cm = build(ens)
+    reg._models["m"] = ServedModel(
+        name="m", version=3, artifact=cm, engine=cm.engine(),
+        engine_overrides=None,
+    )
+    entry = reg.register("m", ens)
+    assert entry.version == 4 and entry.engine_overrides == {}
+
+
+# -- deprecation shims ---------------------------------------------------------
+
+
+def test_legacy_engine_kwargs_warn_but_work(trained):
+    ens, xb = trained["binary"]
+    table = compile_ensemble(ens)
+    with pytest.warns(DeprecationWarning):
+        eng = XTimeEngine(table, backend="jnp", mode="direct", b_blk=64)
+    assert eng.config == DeployConfig(backend="jnp", mode="direct", b_blk=64)
+    np.testing.assert_allclose(
+        np.asarray(eng.raw_margin(xb)), ens.raw_margin(xb),
+        rtol=1e-4, atol=1e-5,
+    )
+    with pytest.raises(TypeError):
+        XTimeEngine(table, config=DeployConfig(), backend="jnp")
+
+
+def test_config_engine_form_does_not_warn(trained):
+    ens, _ = trained["binary"]
+    table = compile_ensemble(ens)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        XTimeEngine(table)
+        XTimeEngine.from_config(table, DeployConfig(mode="msb_lsb"))
+
+
+def test_legacy_registry_kwargs_warn_but_work(trained):
+    ens, xb = trained["binary"]
+    with pytest.warns(DeprecationWarning):
+        reg = TableRegistry(b_blk=64, mode="direct")
+    assert reg.deploy.b_blk == 64
+    with pytest.warns(DeprecationWarning):
+        entry = reg.register("m", ens, mode="two_cycle")
+    assert entry.deploy.mode == "two_cycle" and entry.deploy.b_blk == 64
+    np.testing.assert_allclose(
+        np.asarray(entry.engine.raw_margin(xb)), ens.raw_margin(xb),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_deploy_config_validation():
+    with pytest.raises(ValueError):
+        DeployConfig(backend="cuda")
+    with pytest.raises(ValueError):
+        DeployConfig(mode="nope")
+    with pytest.raises(ValueError):
+        DeployConfig(noc_config="forward")
+    cfg = DeployConfig.from_dict(
+        {"backend": "pallas", "mode": "msb_lsb", "some_future_field": 1}
+    )
+    assert cfg == DeployConfig(backend="pallas", mode="msb_lsb")
+    assert DeployConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_lazy_package_exports():
+    import repro
+    import repro.core as core
+
+    assert core.XTimeEngine is XTimeEngine
+    assert core.CompiledModel is CompiledModel
+    assert core.build is build and repro.build is build
+    assert repro.CompiledModel is CompiledModel
+    assert repro.DeployConfig is DeployConfig
+    assert "XTimeEngine" in dir(core) and "CompiledModel" in dir(repro)
+    with pytest.raises(AttributeError):
+        core.does_not_exist
