@@ -1,8 +1,9 @@
-"""Shared benchmark helpers: model training cache + timing."""
+"""Shared benchmark helpers: model training cache + timing + provenance."""
 
 from __future__ import annotations
 
 import os
+import subprocess
 import time
 from functools import lru_cache
 
@@ -18,6 +19,23 @@ FAST = os.environ.get("BENCH_FAST", "1") != "0"
 
 def budget(full: int, fast: int) -> int:
     return fast if FAST else full
+
+
+@lru_cache(maxsize=1)
+def git_rev() -> str:
+    """Short git revision of the working tree ('unknown' outside a repo) —
+    stamped into every BENCH_*.json record so the perf trajectory lines
+    up with history."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else "unknown"
+    except (OSError, subprocess.TimeoutExpired):  # pragma: no cover
+        return "unknown"
 
 
 @lru_cache(maxsize=None)

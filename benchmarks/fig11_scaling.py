@@ -1,12 +1,19 @@
 """Fig. 11: throughput scaling vs N_trees, D (GPU degrades linearly;
-X-TIME flat until the chip fills) and vs N_feat (X-TIME's pain point)."""
+X-TIME flat until the chip fills) and vs N_feat (X-TIME's pain point).
+
+Plus a MEASURED scale-out section (``fig11c/``): the shard_map engine
+across mesh sizes and NoC programs (accumulate / batch / hybrid).  On
+fake host devices the wall-clock mixes host-thread parallelism with
+dispatch+collective overhead and does not model real ICI scaling — the
+value of the record is the per-revision trajectory that CI archives
+(benchmarks/README.md)."""
 
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.compile import CAMTable, pack_cores
-from repro.core.noc import plan_noc
+from repro.core.noc import ENGINE_COLLECTIVES, plan_noc
 from repro.core.perfmodel import gpu_perf_model, xtime_perf
 
 
@@ -25,6 +32,48 @@ def _synthetic_table(n_trees: int, depth: int, n_feat: int) -> CAMTable:
         n_trees=n_trees, n_features=n_feat, n_bins=256, n_outputs=1,
         task="binary", kind="gbdt", base_score=0.0, n_classes=2,
     )
+
+
+def _measured_scaleout() -> list[dict]:
+    """shard_map engine throughput over 1..N fake/real devices."""
+    import jax
+    from jax.sharding import Mesh
+
+    from benchmarks.common import budget, time_call
+    from repro.core.deploy import DeployConfig
+    from repro.core.engine import XTimeEngine
+
+    devices = jax.devices()
+    n_feat, depth, n_trees = 32, 6, 64
+    table = _synthetic_table(n_trees, depth, n_feat)
+    b = budget(1024, 256)
+    rng = np.random.default_rng(1)
+    q = rng.integers(0, 256, size=(b, n_feat), dtype=np.int32)
+
+    rows = []
+    sizes = sorted({n for n in (1, 2, len(devices)) if n <= len(devices)})
+    for n_dev in sizes:
+        mesh = Mesh(np.asarray(devices[:n_dev]).reshape(1, n_dev),
+                    ("data", "model"))
+        for noc in ("accumulate", "batch", "hybrid"):
+            cfg = DeployConfig(noc_config=noc, spmd="shard_map")
+            eng = XTimeEngine.from_config(table, cfg, mesh=mesh)
+            us = time_call(lambda: np.asarray(eng.raw_margin(q)))
+            rows.append({
+                "name": f"fig11c/scaleout_{noc}_d{n_dev}",
+                "us_per_call": us,
+                "derived": (
+                    f"samples_per_s={b / (us * 1e-6):.0f};"
+                    f"n_devices={n_dev};batch={b};"
+                    f"collective={ENGINE_COLLECTIVES[noc]}"
+                ),
+                "config": {
+                    "spmd": "shard_map", "noc_config": noc, "backend": "jnp",
+                    "n_devices": n_dev, "batch": b,
+                    "rows": int(table.low.shape[0]), "n_features": n_feat,
+                },
+            })
+    return rows
 
 
 def run() -> list[dict]:
@@ -65,4 +114,5 @@ def run() -> list[dict]:
                        f"gpu_tput_msps={gp.throughput_msps:.1f};"
                        f"segments={plc.n_feature_segments};bottleneck={xt.bottleneck}",
         })
+    rows.extend(_measured_scaleout())
     return rows

@@ -1,49 +1,174 @@
 """Benchmark driver: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  BENCH_FAST=0 for full budgets.
+Prints the legacy ``name,us_per_call,derived`` CSV on stdout AND writes a
+structured ``BENCH_<gitrev>.json`` file (see ``SCHEMA`` below) so every
+run leaves a machine-readable perf record — CI uploads it as an artifact
+and ``--check`` re-validates it (benchmarks/README.md documents the
+schema).  ``BENCH_FAST=0`` switches to full budgets.
+
+Usage:
+    python benchmarks/run.py                      # every module
+    python benchmarks/run.py --only serve_bench   # subset
+    python benchmarks/run.py --out bench-out      # record directory
+    python benchmarks/run.py --check bench-out/BENCH_abc1234.json
+
+Exit status is nonzero when any module fails (failures are also recorded
+in the JSON payload, so CI keeps the partial record as an artifact).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+SCHEMA_VERSION = 1
+_FORMAT = "xtime-bench"
+
+# every record must carry these; "config" may be None for analytic rows
+RECORD_FIELDS = ("module", "name", "us_per_call", "derived", "config", "git_rev")
+
+MODULE_NAMES = [
+    "fig8_area_power",
+    "tableI_precision",
+    "fig11_scaling",
+    "kernel_bench",
+    "fig9_accuracy",
+    "fig9b_defects",
+    "fig10_latency_throughput",
+    "serve_bench",
+]
 
 
-def main() -> None:
-    from benchmarks import (
-        fig8_area_power,
-        fig9_accuracy,
-        fig9b_defects,
-        fig10_latency_throughput,
-        fig11_scaling,
-        kernel_bench,
-        serve_bench,
-        tableI_precision,
+def validate_payload(payload: dict) -> None:
+    """Raise ValueError unless ``payload`` is a well-formed bench record
+    file — the same check CI runs on the uploaded artifact."""
+    if payload.get("format") != _FORMAT:
+        raise ValueError(f"format {payload.get('format')!r} != {_FORMAT!r}")
+    if payload.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(
+            f"schema_version {payload.get('schema_version')!r} != {SCHEMA_VERSION}"
+        )
+    for key in ("git_rev", "fast", "records", "failures", "env"):
+        if key not in payload:
+            raise ValueError(f"missing top-level key {key!r}")
+    if not isinstance(payload["records"], list):
+        raise ValueError("records must be a list")
+    for i, rec in enumerate(payload["records"]):
+        missing = [k for k in RECORD_FIELDS if k not in rec]
+        if missing:
+            raise ValueError(f"record {i} missing fields {missing}: {rec}")
+        if not isinstance(rec["name"], str) or not isinstance(rec["derived"], str):
+            raise ValueError(f"record {i}: name/derived must be strings")
+        if not isinstance(rec["us_per_call"], (int, float)):
+            raise ValueError(f"record {i}: us_per_call must be a number")
+        if rec["config"] is not None and not isinstance(rec["config"], dict):
+            raise ValueError(f"record {i}: config must be a dict or null")
+    for i, f in enumerate(payload["failures"]):
+        if "module" not in f or "error" not in f:
+            raise ValueError(f"failure {i} missing module/error: {f}")
+
+
+def check_file(path: str | Path) -> dict:
+    payload = json.loads(Path(path).read_text())
+    validate_payload(payload)
+    return payload
+
+
+def _bench_env() -> dict:
+    import jax
+
+    return {
+        "platform": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "jax": jax.__version__,
+        "python": sys.version.split()[0],
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--only", nargs="+", choices=MODULE_NAMES, metavar="MODULE",
+        help="run only these modules (default: all)",
     )
+    ap.add_argument(
+        "--out", default="benchmarks/out", metavar="DIR",
+        help="directory for the BENCH_<gitrev>.json record (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--check", metavar="PATH",
+        help="validate an existing BENCH_*.json and print a summary, then exit",
+    )
+    args = ap.parse_args(argv)
 
-    modules = [
-        ("fig8_area_power", fig8_area_power),
-        ("tableI_precision", tableI_precision),
-        ("fig11_scaling", fig11_scaling),
-        ("kernel_bench", kernel_bench),
-        ("fig9_accuracy", fig9_accuracy),
-        ("fig9b_defects", fig9b_defects),
-        ("fig10_latency_throughput", fig10_latency_throughput),
-        ("serve_bench", serve_bench),
-    ]
+    if args.check:
+        payload = check_file(args.check)
+        print(
+            f"{args.check}: valid {_FORMAT} v{payload['schema_version']} — "
+            f"{len(payload['records'])} records, "
+            f"{len(payload['failures'])} failures, "
+            f"git {payload['git_rev']}, fast={payload['fast']}"
+        )
+        sys.exit(1 if payload["failures"] else 0)
+
+    import importlib
+
+    from benchmarks.common import FAST, git_rev
+
+    selected = args.only or MODULE_NAMES
+
+    rev = git_rev()
+    records: list[dict] = []
+    failures: list[dict] = []
+    elapsed: dict[str, float] = {}
     print("name,us_per_call,derived")
-    failures = 0
-    for name, mod in modules:
+    for name in selected:
         t0 = time.time()
+        # import inside the guard: an import-time failure must land in
+        # failures[] like any other, so the record file is still written
         try:
+            mod = importlib.import_module(f"benchmarks.{name}")
             for row in mod.run():
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+                records.append({
+                    "module": name,
+                    "name": row["name"],
+                    "us_per_call": float(row["us_per_call"]),
+                    "derived": row["derived"],
+                    "config": row.get("config"),
+                    "git_rev": rev,
+                })
         except Exception:  # noqa: BLE001
-            failures += 1
             print(f"{name},-1,ERROR", file=sys.stderr)
             traceback.print_exc()
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+            failures.append({
+                "module": name,
+                "error": traceback.format_exc(limit=20)[-2000:],
+            })
+        elapsed[name] = round(time.time() - t0, 1)
+        print(f"# {name} done in {elapsed[name]}s", file=sys.stderr)
+
+    payload = {
+        "format": _FORMAT,
+        "schema_version": SCHEMA_VERSION,
+        "git_rev": rev,
+        "fast": FAST,
+        "modules": selected,
+        "env": _bench_env(),
+        "elapsed_s": elapsed,
+        "records": records,
+        "failures": failures,
+    }
+    validate_payload(payload)  # never write a record CI would reject
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"BENCH_{rev}.json"
+    out_path.write_text(json.dumps(payload, indent=1))
+    print(f"# wrote {out_path} ({len(records)} records)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

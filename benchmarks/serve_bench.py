@@ -61,11 +61,13 @@ def run() -> list[dict]:
     reg = TableRegistry()
     reg.register("bench", artifact)
     base_rps = _per_request_baseline(reg.engine("bench"), stream)
+    deploy = reg.get("bench").engine.config.to_dict()
 
     rows = [{
         "name": "serve/per_request_baseline",
         "us_per_call": 1e6 / base_rps,
         "derived": f"requests_per_s={base_rps:.0f};coalesce=1",
+        "config": {**deploy, "coalesce": 1, "n_requests": n_req},
     }]
     for depth in COALESCE_DEPTHS:
         rps, stats = _served(reg, stream, depth)
@@ -78,6 +80,7 @@ def run() -> list[dict]:
                 f"p50_ms={stats.p50_ms:.2f};p99_ms={stats.p99_ms:.2f};"
                 f"flushes={stats.n_flushes}"
             ),
+            "config": {**deploy, "coalesce": depth, "n_requests": n_req},
         })
     return rows
 

@@ -89,7 +89,9 @@ class CompiledModel:
     def resolved_deploy(self, mesh=None, **overrides) -> DeployConfig:
         """The effective config an engine binds: ``overrides`` applied, then
         'auto' noc_config resolved from the compiled NoC plan ('batch'
-        degrades to 'accumulate' without a mesh to replicate over)."""
+        degrades to 'accumulate' without a mesh to replicate over) and
+        'auto' spmd resolved from the mesh (explicit shard_map collectives
+        on a mesh, plain jit otherwise — DESIGN.md §8)."""
         if "batching" in overrides:
             # a build-time knob: it changes the router program, not the
             # engine binding — silently ignoring it here would serve the
@@ -104,6 +106,8 @@ class CompiledModel:
             if noc_cfg == "batch" and mesh is None:
                 noc_cfg = "accumulate"
             cfg = cfg.replace(noc_config=noc_cfg)
+        if cfg.spmd == "auto":
+            cfg = cfg.replace(spmd="gspmd" if mesh is None else "shard_map")
         return cfg
 
     def engine(self, mesh=None, **overrides) -> "XTimeEngine":

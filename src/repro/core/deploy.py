@@ -22,7 +22,8 @@ from dataclasses import dataclass
 
 BACKENDS = ("jnp", "pallas")
 MODES = ("direct", "inclusive", "msb_lsb", "two_cycle")
-NOC_CONFIGS = ("auto", "accumulate", "batch")
+NOC_CONFIGS = ("auto", "accumulate", "batch", "hybrid")
+SPMD_MODES = ("auto", "gspmd", "shard_map")
 
 
 @dataclass(frozen=True)
@@ -35,7 +36,14 @@ class DeployConfig:
       mode: aCAM cell comparison mode ('direct' | 'inclusive' |
         'msb_lsb' | 'two_cycle').
       noc_config: 'auto' resolves from the compiled ``NoCPlan``;
-        'accumulate' / 'batch' force the engine collective.
+        'accumulate' / 'batch' / 'hybrid' force the engine collective
+        ('hybrid' is the 2-D batch × core program for large meshes —
+        shard_map only, DESIGN.md §8).
+      spmd: how a mesh engine is partitioned.  'shard_map' runs the
+        kernel per device shard and issues the NoC plan's collectives
+        explicitly; 'gspmd' keeps the implicit ``NamedSharding`` +
+        compiler-placed collectives; 'auto' resolves at engine-bind
+        time (mesh present -> 'shard_map', no mesh -> 'gspmd').
       row_axis / batch_axis: mesh axis names for CAM-row sharding and
         batch sharding (plus a leading 'pod' axis when present).
       b_blk / r_blk: kernel batch/row tile sizes — also the padding
@@ -49,6 +57,7 @@ class DeployConfig:
     backend: str = "jnp"
     mode: str = "direct"
     noc_config: str = "auto"
+    spmd: str = "auto"
     row_axis: str = "model"
     batch_axis: str = "data"
     b_blk: int = 128
@@ -66,6 +75,8 @@ class DeployConfig:
             raise ValueError(
                 f"noc_config {self.noc_config!r} not in {NOC_CONFIGS}"
             )
+        if self.spmd not in SPMD_MODES:
+            raise ValueError(f"spmd {self.spmd!r} not in {SPMD_MODES}")
         if self.b_blk < 1 or self.r_blk < 1 or self.c_mult < 1:
             raise ValueError("b_blk, r_blk and c_mult must be >= 1")
 

@@ -1,14 +1,29 @@
 """X-TIME inference engine: compiled CAM table -> batched predictions.
 
-Single-device path: the Pallas kernel (TPU) or its jnp oracle (CPU).
-Distributed path: the CAM rows (cores) are sharded on the mesh ``model``
-axis and the query batch on ``data`` (× ``pod``); the H-tree in-network
-reduction of §III-D becomes an ICI all-reduce over the ``model`` axis (see
-noc.py for the router-bit -> collective mapping and DESIGN.md §2).
+Single-device path: the Pallas kernel (TPU) or its jnp oracle (CPU),
+under a plain ``jax.jit``.  Execution knobs arrive as a ``DeployConfig``
+(``XTimeEngine.from_config`` / ``CompiledModel.engine``); the loose-kwarg
+constructor form is deprecated.
+
+Scale-out path (``config.spmd``, DESIGN.md §8): on a mesh the CAM rows
+(cores) shard over ``config.row_axis`` and the query batch over
+``config.batch_axis`` (× ``pod``), and the §III-D H-tree router program
+becomes collectives in one of two partitioning modes:
+
+  * ``spmd='shard_map'`` (default with a mesh) — the kernel runs once
+    per device shard and the NoC plan is issued as EXPLICIT collectives:
+    ``psum`` over the row axis for ``noc_config='accumulate'``, no
+    collective for the replicated-table ``'batch'`` program, and
+    all-gather + ``psum_scatter`` for the 2-D ``'hybrid'`` program.
+  * ``spmd='gspmd'`` — implicit ``NamedSharding`` placement; the XLA
+    partitioner places the equivalent collectives.  Kept as the
+    independent oracle the shard_map path is property-tested
+    bit-equivalent against (tests/test_scaleout.py).
 
 The engine reproduces ``Ensemble.raw_margin`` / ``Ensemble.predict``
 bit-for-bit on binned inputs — that equivalence is the correctness
-contract (tested in tests/test_engine.py).
+contract (tested in tests/test_engine.py), and it holds across every
+(spmd, noc_config) combination.
 """
 
 from __future__ import annotations
@@ -22,12 +37,31 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.6 re-exports it at the top level
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - version-dependent import path
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.core.compile import CAMTable
 from repro.core.deploy import DeployConfig
 from repro.kernels import ops as kops
 from repro.kernels.ref import cam_match_ref
 
 _UNSET = object()  # distinguishes "kwarg not passed" from an explicit default
+
+
+def _wrap_shard_map(fn, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off (the Pallas kernel body
+    is opaque to the rep-rule checker); the flag was renamed ``check_rep``
+    -> ``check_vma`` across jax versions, so try both before giving it up
+    entirely."""
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    for check_kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return _shard_map(fn, **kw, **check_kw)
+        except TypeError:  # pragma: no cover - version-dependent signature
+            continue
+    raise TypeError("no compatible shard_map signature found")
 
 
 @dataclass
@@ -52,8 +86,11 @@ class XTimeEngine:
         compiled NoC plan before binding.
       mesh: optional jax Mesh. When given, rows are sharded over
         ``config.row_axis`` and batch over ``config.batch_axis`` (+
-        leading 'pod' axis if present), and the margin all-reduce maps
-        the paper's NoC accumulate config.
+        leading 'pod' axis if present), and ``config.noc_config`` picks
+        the collective program realizing the paper's router bits
+        ('accumulate' / 'batch' / 'hybrid').  ``config.spmd`` selects
+        explicit shard_map collectives (default on a mesh) or implicit
+        GSPMD partitioning — bit-equivalent paths, DESIGN.md §8.
 
     The loose keyword form (``backend=``, ``mode=``, ``b_blk=``, ...) is
     deprecated: those knobs now live in ``DeployConfig``.  It still works
@@ -114,10 +151,34 @@ class XTimeEngine:
         self.b_blk = config.b_blk
         self.r_blk = config.r_blk
         self.interpret = config.interpret
+        # 'auto' partitioning resolves at bind time: explicit shard_map
+        # collectives when there is a mesh to communicate over, plain jit
+        # otherwise (without a mesh both modes are the same program).
+        if mesh is None:
+            self.spmd = "gspmd"
+        elif config.spmd == "auto":
+            self.spmd = "shard_map"
+        else:
+            self.spmd = config.spmd
+        if mesh is not None:
+            missing = [
+                ax
+                for ax in (self.row_axis, self.batch_axis)
+                if ax not in mesh.axis_names
+            ]
+            if missing:
+                raise ValueError(
+                    f"mesh {mesh.axis_names} lacks configured axes {missing}"
+                )
+            if self.noc_config == "hybrid" and self.spmd != "shard_map":
+                raise ValueError(
+                    "noc_config='hybrid' (all-gather + psum_scatter) is only "
+                    "expressible with spmd='shard_map'"
+                )
 
         # row padding must also be divisible by the row-shard count
         row_mult = self.r_blk
-        if mesh is not None and self.noc_config == "accumulate":
+        if mesh is not None and self.noc_config in ("accumulate", "hybrid"):
             row_mult = self.r_blk * mesh.shape[self.row_axis]
         low, high, leaf = kops.pad_tables(
             table.low, table.high, table.leaf_matrix(),
@@ -151,8 +212,8 @@ class XTimeEngine:
         axes = [self.batch_axis]
         if self.mesh is not None and "pod" in self.mesh.axis_names:
             axes = ["pod", self.batch_axis]
-        if self.noc_config == "batch":
-            axes.append(self.row_axis)  # batch over cores too (replicated trees)
+        if self.noc_config in ("batch", "hybrid"):
+            axes.append(self.row_axis)  # batch over cores too
         return P(tuple(axes))
 
     def _row_spec(self) -> P:
@@ -169,28 +230,72 @@ class XTimeEngine:
 
     # -- compute -----------------------------------------------------------
 
-    def _margin_fn(self) -> Callable:
-        """Raw-margin function of (q, low, high, leaf) — jit-compatible."""
-        table = self.table
+    def _kernel_fn(self) -> Callable:
+        """(q, low, high, leaf) -> (B, C_pad) raw accumulated leaf sums over
+        the rows it is handed — no epilogue, no collectives.  Under
+        shard_map the operands (and B/R) are per-shard."""
         backend, mode = self.backend, self.mode
         b_blk, r_blk, interpret = self.b_blk, self.r_blk, self.interpret
 
-        def margin(q, low, high, leaf):
+        def kernel(q, low, high, leaf):
             if backend == "pallas":
-                out = kops.cam_match(
+                return kops.cam_match(
                     q, low, high, leaf,
                     out_b=q.shape[0], out_c=leaf.shape[1],
                     b_blk=b_blk, r_blk=r_blk, mode=mode, interpret=interpret,
                 )
-            else:
-                out = cam_match_ref(q, low, high, leaf, mode=mode)
+            return cam_match_ref(q, low, high, leaf, mode=mode)
+
+        return kernel
+
+    def _epilogue_fn(self) -> Callable:
+        """Channel slice + base score + RF averaging — applied exactly once,
+        AFTER any cross-core reduction (adding the base score per shard
+        would count it row-shard-count times)."""
+        table = self.table
+
+        def epilogue(out):
             out = out[:, : table.n_outputs]
             out = out + jnp.float32(table.base_score)
             if table.kind == "rf":
                 out = out / jnp.float32(max(1, table.n_trees))
             return out
 
-        return margin
+        return epilogue
+
+    def _margin_fn(self) -> Callable:
+        """Raw-margin function of (q, low, high, leaf) — jit-compatible.
+
+        With ``spmd='shard_map'`` the kernel runs per device shard and the
+        NoC router program is issued as explicit collectives (DESIGN.md
+        §8): ``accumulate`` -> psum of the partial margins over the row
+        axis (the H-tree in-network reduction); ``batch`` -> replicated
+        tables, batch split over every axis, no collective; ``hybrid`` ->
+        the queries arrive sharded over (batch × core), are all-gathered
+        along the row axis, and the partial margins reduce-scatter back so
+        the output stays 2-D-sharded (all-reduce cost without the
+        replicated output of 'accumulate').
+        """
+        kernel, epilogue = self._kernel_fn(), self._epilogue_fn()
+        if self.mesh is not None and self.spmd == "shard_map":
+            noc, row_axis = self.noc_config, self.row_axis
+
+            def body(q, low, high, leaf):
+                if noc == "hybrid":
+                    q = jax.lax.all_gather(q, row_axis, axis=0, tiled=True)
+                out = kernel(q, low, high, leaf)
+                if noc == "accumulate":
+                    out = jax.lax.psum(out, row_axis)
+                elif noc == "hybrid":
+                    out = jax.lax.psum_scatter(
+                        out, row_axis, scatter_dimension=0, tiled=True
+                    )
+                return out
+
+            qs, rs = self._batch_spec(), self._row_spec()
+            mapped = _wrap_shard_map(body, self.mesh, (qs, rs, rs, rs), qs)
+            return lambda q, low, high, leaf: epilogue(mapped(q, low, high, leaf))
+        return lambda q, low, high, leaf: epilogue(kernel(q, low, high, leaf))
 
     def _jitted(self, key: str, donate: bool = False) -> Callable:
         cache_key = (key, donate)
@@ -226,7 +331,9 @@ class XTimeEngine:
         return jfn
 
     def _prep_queries(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
-        q = kops.pad_queries(jnp.asarray(q_bins), self.arrays.f_pad, b_blk=self.b_blk)
+        # pad to a batch both the kernel tiling and the mesh sharding accept
+        mult = int(np.lcm(self.b_blk, self.batch_multiple))
+        q = kops.pad_queries(jnp.asarray(q_bins), self.arrays.f_pad, b_blk=mult)
         if self.mesh is not None:
             q = jax.device_put(q, NamedSharding(self.mesh, self._batch_spec()))
         return q
@@ -255,16 +362,21 @@ class XTimeEngine:
         buckets must be ``b_blk`` multiples; the jnp/XLA oracle accepts any
         batch, letting the serving layer use power-of-two buckets below
         ``b_blk``.  A mesh additionally requires the batch axis to divide
-        evenly across its batch shards.
+        evenly across its batch shards — and under ``spmd='shard_map'``
+        each shard's LOCAL batch runs the Pallas kernel on its own, so
+        the global batch must be a ``b_blk × shards`` multiple.
         """
         mult = self.b_blk if self.backend == "pallas" else 1
         if self.mesh is not None:
             shards = self.mesh.shape[self.batch_axis]
             if "pod" in self.mesh.axis_names:
                 shards *= self.mesh.shape["pod"]
-            if self.noc_config == "batch":
+            if self.noc_config in ("batch", "hybrid"):
                 shards *= self.mesh.shape[self.row_axis]
-            mult = max(mult, shards)
+            if self.spmd == "shard_map" and self.backend == "pallas":
+                mult = self.b_blk * shards
+            else:
+                mult = max(mult, shards)
         return mult
 
     def padded_fn(self, kind: str = "predict") -> Callable:

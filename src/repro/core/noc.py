@@ -20,6 +20,15 @@ On the TPU mesh, the same three programs become collective plans:
                        but the traffic model differs — more flits/sample)
   batch             -> table replicated; batch sharded over `model` too;
                        no cross-core reduction (replica groups)
+  hybrid            -> the 2-D batch × core program for large meshes: rows
+                       shard over `model` AND the batch over every axis;
+                       queries all-gather along `model` into each row
+                       shard, partial margins psum_scatter back — an
+                       all-reduce split into its gather/reduce-scatter
+                       halves so no device ever holds a replicated output
+                       block.  (A mesh-level extension of Fig. 7c, not a
+                       router program the 1365-router chip can express —
+                       shard_map only, see DESIGN.md §8.)
 
 This module computes the router program + traffic statistics for the perf
 model, and the collective plan used by ``XTimeEngine``.
@@ -32,6 +41,14 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.compile import CAMTable, ChipSpec, CorePlacement
+
+# engine noc_config -> the explicit collective(s) the shard_map path
+# issues over the row axis (introspection for benches/examples/docs)
+ENGINE_COLLECTIVES = {
+    "accumulate": "psum",
+    "batch": "none (replica groups)",
+    "hybrid": "all_gather + psum_scatter",
+}
 
 
 @dataclass

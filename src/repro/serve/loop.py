@@ -228,6 +228,7 @@ class ServeLoop:
                 "backend": deploy.backend,
                 "mode": deploy.mode,
                 "noc_config": entry.engine.noc_config,
+                "spmd": entry.engine.spmd,
                 "batching": entry.batching,
             },
             "measured": {

@@ -6,7 +6,11 @@ wrapped around a ``repro.api.CompiledModel`` artifact — the registry
 accepts a trained ``Ensemble`` (compiles it), a raw ``CAMTable`` (places
 it), or a ``CompiledModel`` loaded from disk (the cold-start path:
 installed as-is, zero recompilation, no training imports), and binds the
-artifact's ``DeployConfig`` to the registry's mesh.
+artifact's ``DeployConfig`` to the registry's mesh.  On a multi-device
+mesh that binding resolves ``spmd='auto'`` to the shard_map scale-out
+path (explicit NoC-plan collectives, DESIGN.md §8) with no caller
+changes; serving buckets stay correct because the batcher keys off
+``XTimeEngine.batch_multiple``.
 
 Hot swap: re-registering a name atomically replaces its engine and bumps
 the version; in-flight flushes keep the old engine object (Python

@@ -1,0 +1,84 @@
+"""benchmarks/run.py structured records: a real driver run writes a
+BENCH_*.json that the CI validator accepts, and failures exit nonzero."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if ROOT not in sys.path:  # `benchmarks` is a namespace package at the root
+    sys.path.insert(0, ROOT)
+
+
+def _run_driver(args: list[str], tmp_path) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "benchmarks", "run.py"), *args],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600,
+    )
+
+
+@pytest.fixture(scope="module")
+def bench_file(tmp_path_factory):
+    """One fast analytic-module run shared by the schema tests."""
+    out_dir = tmp_path_factory.mktemp("bench")
+    proc = _run_driver(
+        ["--only", "fig8_area_power", "--out", str(out_dir)], out_dir
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    files = sorted(out_dir.glob("BENCH_*.json"))
+    assert len(files) == 1, list(out_dir.iterdir())
+    return files[0]
+
+
+def test_bench_record_schema(bench_file):
+    from benchmarks.run import RECORD_FIELDS, validate_payload
+
+    payload = json.loads(bench_file.read_text())
+    validate_payload(payload)  # the check CI runs on the artifact
+    assert payload["records"], "driver wrote an empty record set"
+    for rec in payload["records"]:
+        assert set(RECORD_FIELDS) <= set(rec)
+        assert rec["module"] == "fig8_area_power"
+        assert rec["git_rev"] == payload["git_rev"]
+
+
+def test_bench_record_check_mode(bench_file, tmp_path):
+    ok = _run_driver(["--check", str(bench_file)], tmp_path)
+    assert ok.returncode == 0, ok.stderr[-2000:]
+    assert "valid xtime-bench" in ok.stdout
+
+    broken = tmp_path / "BENCH_broken.json"
+    payload = json.loads(bench_file.read_text())
+    del payload["records"][0]["us_per_call"]
+    broken.write_text(json.dumps(payload))
+    bad = _run_driver(["--check", str(broken)], tmp_path)
+    assert bad.returncode != 0
+
+
+def test_validator_rejects_malformed_payloads():
+    from benchmarks.run import validate_payload
+
+    good = {
+        "format": "xtime-bench", "schema_version": 1, "git_rev": "abc",
+        "fast": True, "env": {}, "records": [], "failures": [],
+    }
+    validate_payload(good)
+    for mutate in (
+        lambda d: d.update(format="other"),
+        lambda d: d.update(schema_version=99),
+        lambda d: d.pop("git_rev"),
+        lambda d: d.update(records=[{"name": "x"}]),
+        lambda d: d.update(failures=[{"module": "m"}]),
+    ):
+        bad = json.loads(json.dumps(good))
+        mutate(bad)
+        with pytest.raises(ValueError):
+            validate_payload(bad)

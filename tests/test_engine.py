@@ -8,6 +8,7 @@ import pytest
 from repro.core.baselines import TraversalBaseline
 from repro.core.compile import compile_ensemble
 from repro.core.defects import inject_query_defects, inject_table_defects
+from repro.core.deploy import DeployConfig
 from repro.core.engine import XTimeEngine
 from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import GBDTParams, RFParams, train_gbdt, train_rf
@@ -46,7 +47,7 @@ def trained():
 def test_engine_matches_ensemble(trained, case):
     ens, xb = trained[case]
     table = compile_ensemble(ens)
-    eng = XTimeEngine(table, backend="jnp")
+    eng = XTimeEngine.from_config(table, DeployConfig(backend="jnp"))
     np.testing.assert_allclose(
         np.asarray(eng.raw_margin(xb)), ens.raw_margin(xb), rtol=1e-4, atol=1e-5
     )
@@ -66,9 +67,11 @@ def test_traversal_matches_ensemble(trained, case):
 def test_pallas_engine_matches_jnp(trained):
     ens, xb = trained[("eye", "multiclass", "gbdt")]
     table = compile_ensemble(ens)
-    ej = XTimeEngine(table, backend="jnp")
+    ej = XTimeEngine.from_config(table, DeployConfig(backend="jnp"))
     for mode in ("direct", "msb_lsb", "two_cycle"):
-        ep = XTimeEngine(table, backend="pallas", mode=mode, interpret=True)
+        ep = XTimeEngine.from_config(
+            table, DeployConfig(backend="pallas", mode=mode, interpret=True)
+        )
         np.testing.assert_allclose(
             np.asarray(ep.raw_margin(xb)), np.asarray(ej.raw_margin(xb)),
             rtol=1e-5, atol=1e-6,
@@ -90,11 +93,11 @@ def test_defects_degrade_gracefully(trained):
     (Fig. 9b qualitative shape)."""
     ens, xb = trained[("eye", "multiclass", "gbdt")]
     table = compile_ensemble(ens)
-    base = np.asarray(XTimeEngine(table, backend="jnp").predict(xb))
+    base = np.asarray(XTimeEngine(table).predict(xb))
     agree = {}
     for frac in (0.005, 0.2):
         t2 = inject_table_defects(table, frac, np.random.default_rng(1))
-        pred = np.asarray(XTimeEngine(t2, backend="jnp").predict(xb))
+        pred = np.asarray(XTimeEngine(t2).predict(xb))
         agree[frac] = float((pred == base).mean())
     assert agree[0.005] > 0.9
     assert agree[0.005] >= agree[0.2]

@@ -14,7 +14,10 @@ def _run(code: str) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # pin the platform: fake host devices need CPU anyway, and leaving it
+    # unset makes jax probe the TPU plugin, which stalls for minutes on
+    # the (absent) GCP metadata server in sandboxed environments
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, env=env, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]

@@ -17,7 +17,10 @@ def _run_subprocess(code: str) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # pin the platform: fake host devices need CPU anyway, and leaving it
+    # unset makes jax probe the TPU plugin, which stalls for minutes on
+    # the (absent) GCP metadata server in sandboxed environments
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True, env=env,
         timeout=600,
@@ -106,6 +109,7 @@ def test_sharded_xtime_engine_matches_single_device():
 import json, numpy as np
 import jax
 from repro.core.compile import compile_ensemble
+from repro.core.deploy import DeployConfig
 from repro.core.engine import XTimeEngine
 from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import train_gbdt, GBDTParams
@@ -120,8 +124,8 @@ ens = train_gbdt(q.transform(ds.x_train), ds.y_train, task="multiclass",
                  params=GBDTParams(n_rounds=4, max_leaves=32))
 table = compile_ensemble(ens)
 mesh = make_host_mesh(2, 4)
-e1 = XTimeEngine(table, backend="jnp")
-e2 = XTimeEngine(table, backend="jnp", mesh=mesh)
+e1 = XTimeEngine.from_config(table, DeployConfig(backend="jnp"))
+e2 = XTimeEngine.from_config(table, DeployConfig(backend="jnp"), mesh=mesh)
 m1 = np.asarray(e1.raw_margin(xb))
 m2 = np.asarray(e2.raw_margin(xb))
 print(json.dumps({"maxerr": float(np.abs(m1-m2).max()),
@@ -138,6 +142,7 @@ def test_batch_replicated_noc_config_matches():
     code = r"""
 import json, numpy as np
 from repro.core.compile import compile_ensemble
+from repro.core.deploy import DeployConfig
 from repro.core.engine import XTimeEngine
 from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import train_gbdt, GBDTParams
@@ -151,8 +156,9 @@ ens = train_gbdt(q.transform(ds.x_train), ds.y_train, task="binary",
                  n_bins=256, params=GBDTParams(n_rounds=3, max_leaves=16))
 table = compile_ensemble(ens)
 mesh = make_host_mesh(2, 4)
-e1 = XTimeEngine(table, backend="jnp")
-e2 = XTimeEngine(table, backend="jnp", mesh=mesh, noc_config="batch")
+e1 = XTimeEngine.from_config(table, DeployConfig(backend="jnp"))
+e2 = XTimeEngine.from_config(
+    table, DeployConfig(backend="jnp", noc_config="batch"), mesh=mesh)
 m1 = np.asarray(e1.raw_margin(xb))
 m2 = np.asarray(e2.raw_margin(xb))
 print(json.dumps({"maxerr": float(np.abs(m1-m2).max())}))

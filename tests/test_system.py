@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.compile import compile_ensemble, pack_cores
+from repro.core.deploy import DeployConfig
 from repro.core.engine import XTimeEngine
 from repro.core.noc import plan_noc
 from repro.core.perfmodel import gpu_perf_model, xtime_perf
@@ -37,7 +38,7 @@ def pipeline():
 def test_end_to_end_accuracy_through_engine(pipeline):
     ens, xb_te, ds = pipeline["8bit"]
     table = compile_ensemble(ens)
-    eng = XTimeEngine(table, backend="jnp")
+    eng = XTimeEngine.from_config(table, DeployConfig(backend="jnp"))
     acc = accuracy_metric("binary", ds.y_test, np.asarray(eng.predict(xb_te)))
     base = max(np.mean(ds.y_test), 1 - np.mean(ds.y_test))
     assert acc > base + 0.03
