@@ -1,5 +1,9 @@
 """Aggregate results/dryrun/*.json into the EXPERIMENTS.md §Dry-run and
-§Roofline tables (markdown)."""
+§Roofline tables (markdown), and BENCH_*.json perf records (committed
+baselines + fresh runs) into the perf-trajectory table:
+
+    python benchmarks/aggregate.py --bench benchmarks/baselines bench-out
+"""
 
 from __future__ import annotations
 
@@ -87,7 +91,70 @@ def _bottleneck_hint(r: dict) -> str:
     return "increase arithmetic intensity (larger tiles, fewer reshards)"
 
 
-def main() -> None:
+def load_bench_records(dirs: list[str]) -> list[dict]:
+    """Every BENCH_*.json payload under ``dirs``, oldest-committed first
+    (baselines sort before fresh runs because callers list them first)."""
+    out = []
+    for d in dirs:
+        for fn in sorted(glob.glob(os.path.join(d, "BENCH_*.json"))):
+            with open(fn) as f:
+                payload = json.load(f)
+            payload["_path"] = fn
+            out.append(payload)
+    return out
+
+
+def bench_table(payloads: list[dict]) -> str:
+    """Perf trajectory: one row per bench entry, one column per record.
+
+    The first payload (the committed baseline, by convention) anchors the
+    delta column, making regressions/improvements plottable straight from
+    the markdown."""
+    if not payloads:
+        return "(no BENCH_*.json records found)"
+    revs = [p["git_rev"] for p in payloads]
+    names = []
+    for p in payloads:
+        for r in p["records"]:
+            key = (r["module"], r["name"])
+            if key not in names:
+                names.append(key)
+    by_rev = [
+        {(r["module"], r["name"]): float(r["us_per_call"])
+         for r in p["records"]}
+        for p in payloads
+    ]
+    header = "| module/name | " + " | ".join(f"{r} us" for r in revs) \
+        + " | vs first |"
+    lines = [header, "|---|" + "---|" * (len(revs) + 1)]
+    for key in names:
+        cells = [(f"{m[key]:.1f}" if key in m else "-") for m in by_rev]
+        first = by_rev[0].get(key)
+        last = by_rev[-1].get(key)
+        delta = (f"{(last - first) / first:+.0%}"
+                 if first and last is not None else "-")
+        lines.append(f"| {key[0]}/{key[1]} | " + " | ".join(cells)
+                     + f" | {delta} |")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--bench", nargs="+", metavar="DIR",
+        help="print the BENCH_*.json perf-trajectory table for these "
+             "directories (list the committed baselines dir first) "
+             "instead of the dry-run tables",
+    )
+    args = ap.parse_args(argv)
+    if args.bench:
+        payloads = load_bench_records(args.bench)
+        print(f"# Bench trajectory: {len(payloads)} records from "
+              f"{', '.join(args.bench)}\n")
+        print(bench_table(payloads))
+        return
     results = load_results()
     n_ok = sum(r["status"] == "ok" for r in results)
     n_skip = sum(r["status"] == "skip" for r in results)

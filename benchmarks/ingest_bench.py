@@ -1,0 +1,78 @@
+"""Ingestion-frontend benchmark: dump -> CompiledModel -> served latency.
+
+Measures the cold-start cost a model owner pays to bring an external
+model onto the engine (parse + threshold-grid lowering + compile +
+placement) and the steady-state serve latency of the ingested artifact —
+the end of the §II-D deployment pipeline when the model was never
+trained in-process.  The dump is a real XGBoost-JSON document generated
+from a natively trained ensemble, so sizes are representative and the
+margins are verified bit-equal before timing.
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import budget, time_call, trained_model
+from repro.api import build
+from repro.ingest import to_xgboost_json
+
+
+def run() -> list[dict]:
+    ens, q, ds, xb_te = trained_model("churn", "8bit", "gbdt")
+    doc = to_xgboost_json(ens, q)
+    rows: list[dict] = []
+    with tempfile.TemporaryDirectory() as td:
+        dump = Path(td) / "model.json"
+        dump.write_text(json.dumps(doc))
+        dump_kb = dump.stat().st_size / 1024
+
+        # cold start: parse + lower + compile + place, from the file
+        us = time_call(lambda: build(str(dump)), warmup=1,
+                       iters=budget(5, 3))
+        artifact = build(str(dump))
+        rows.append({
+            "name": "ingest/xgb_json_to_artifact",
+            "us_per_call": us,
+            "derived": (
+                f"dump_kb={dump_kb:.0f};rows={artifact.table.n_rows};"
+                f"trees={artifact.table.n_trees};"
+                f"exact={artifact.ingest['exact']}"
+            ),
+            "config": {"n_bins": artifact.table.n_bins,
+                       "source": artifact.ingest["source"]},
+        })
+
+        # correctness before timing: ingested margins == native margins
+        x_float = ds.x_test[: min(256, len(ds.x_test))]
+        ref = ens.raw_margin(q.transform(x_float))
+        eng = artifact.engine()
+        xb = artifact.bin(x_float)
+        if not np.allclose(np.asarray(eng.raw_margin(xb)), ref,
+                           rtol=1e-5, atol=1e-6):
+            raise AssertionError("ingested margins diverge from native model")
+
+        batch = xb[: budget(256, 128)]
+        np.asarray(eng.predict(batch))  # compile
+        us = time_call(lambda: np.asarray(eng.predict(batch)),
+                       warmup=1, iters=budget(10, 5))
+        rows.append({
+            "name": "ingest/serve_predict_batch",
+            "us_per_call": us,
+            "derived": (
+                f"batch={batch.shape[0]};"
+                f"us_per_row={us / batch.shape[0]:.2f}"
+            ),
+            "config": {**artifact.deploy.to_dict(),
+                       "batch": int(batch.shape[0])},
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -11,6 +11,15 @@ Usage:
     python benchmarks/run.py --only serve_bench   # subset
     python benchmarks/run.py --out bench-out      # record directory
     python benchmarks/run.py --check bench-out/BENCH_abc1234.json
+    python benchmarks/run.py --check bench-out    # glob BENCH_*.json in a dir
+    python benchmarks/run.py --check bench-out \
+        --baseline benchmarks/baselines/BENCH_baseline.json --tolerance 50
+
+Regression gate: ``--baseline`` compares each record's ``us_per_call``
+against the committed baseline (matched on ``module/name``); any entry
+slower than ``baseline * (1 + tolerance/100)`` fails the run (exit 3)
+with a per-entry diff.  The gate runs after a live benchmark run or —
+the CI ``bench-smoke`` path — against an existing record via ``--check``.
 
 Exit status is nonzero when any module fails (failures are also recorded
 in the JSON payload, so CI keeps the partial record as an artifact).
@@ -40,6 +49,7 @@ MODULE_NAMES = [
     "fig9b_defects",
     "fig10_latency_throughput",
     "serve_bench",
+    "ingest_bench",
 ]
 
 
@@ -78,6 +88,79 @@ def check_file(path: str | Path) -> dict:
     return payload
 
 
+def check_path(path: str | Path) -> list[tuple[Path, dict]]:
+    """Validate one record file, or every ``BENCH_*.json`` in a directory."""
+    p = Path(path)
+    if p.is_dir():
+        files = sorted(p.glob("BENCH_*.json"))
+        if not files:
+            raise FileNotFoundError(f"{p}: no BENCH_*.json records")
+    else:
+        files = [p]
+    return [(f, check_file(f)) for f in files]
+
+
+def compare_to_baseline(
+    records: list[dict], baseline: dict, tolerance_pct: float
+) -> tuple[list[dict], list[str]]:
+    """Per-entry us_per_call comparison against a baseline payload.
+
+    Entries are matched on ``(module, name)``.  Returns ``(regressions,
+    lines)`` where each regression dict carries the entry, both timings
+    and the ratio, and ``lines`` is the human diff (regressions, wins,
+    and coverage changes) ready to print.
+    """
+    base = {(r["module"], r["name"]): float(r["us_per_call"])
+            for r in baseline["records"]}
+    cur = {(r["module"], r["name"]): float(r["us_per_call"]) for r in records}
+    allowed = 1.0 + tolerance_pct / 100.0
+    regressions: list[dict] = []
+    lines: list[str] = []
+    for key in sorted(base.keys() & cur.keys()):
+        b, c = base[key], cur[key]
+        # analytic rows record 0.0us: equal-zero is fine, becoming
+        # nonzero is a regression by definition
+        ratio = (c / b) if b > 0 else (float("inf") if c > 0 else 1.0)
+        tag = "ok"
+        if ratio > allowed:
+            tag = "REGRESSION"
+            regressions.append({
+                "module": key[0], "name": key[1],
+                "baseline_us": b, "current_us": c, "ratio": ratio,
+            })
+        elif ratio < 1 / allowed:
+            tag = "faster"
+        lines.append(
+            f"  {tag:>10}  {key[0]}/{key[1]}: {c:.1f}us vs baseline "
+            f"{b:.1f}us ({ratio:.2f}x)"
+        )
+    for key in sorted(cur.keys() - base.keys()):
+        lines.append(f"  {'new':>10}  {key[0]}/{key[1]}: {cur[key]:.1f}us "
+                     "(no baseline entry)")
+    missing = sorted(base.keys() - cur.keys())
+    for key in missing:
+        lines.append(f"  {'missing':>10}  {key[0]}/{key[1]}: in baseline "
+                     "but not in this run")
+    return regressions, lines
+
+
+def run_gate(records: list[dict], baseline_path: str | Path,
+             tolerance_pct: float) -> bool:
+    """Print the baseline diff; True iff no regression beyond tolerance."""
+    baseline = check_file(baseline_path)
+    regressions, lines = compare_to_baseline(records, baseline, tolerance_pct)
+    print(f"# baseline {baseline_path} (git {baseline['git_rev']}), "
+          f"tolerance {tolerance_pct:.0f}%", file=sys.stderr)
+    for ln in lines:
+        print(ln, file=sys.stderr)
+    if regressions:
+        print(f"# PERF REGRESSION: {len(regressions)} entries beyond "
+              f"+{tolerance_pct:.0f}%", file=sys.stderr)
+        return False
+    print("# baseline gate: OK", file=sys.stderr)
+    return True
+
+
 def _bench_env() -> dict:
     import jax
 
@@ -101,19 +184,43 @@ def main(argv: list[str] | None = None) -> None:
     )
     ap.add_argument(
         "--check", metavar="PATH",
-        help="validate an existing BENCH_*.json and print a summary, then exit",
+        help="validate an existing BENCH_*.json (or every record in a "
+             "directory) and print a summary, then exit",
+    )
+    ap.add_argument(
+        "--baseline", metavar="FILE",
+        help="baseline BENCH_*.json to gate against (see benchmarks/README.md)",
+    )
+    ap.add_argument(
+        "--tolerance", type=float, default=25.0, metavar="PCT",
+        help="allowed per-entry us_per_call slowdown over the baseline "
+             "in percent (default: %(default)s)",
     )
     args = ap.parse_args(argv)
 
     if args.check:
-        payload = check_file(args.check)
-        print(
-            f"{args.check}: valid {_FORMAT} v{payload['schema_version']} — "
-            f"{len(payload['records'])} records, "
-            f"{len(payload['failures'])} failures, "
-            f"git {payload['git_rev']}, fast={payload['fast']}"
-        )
-        sys.exit(1 if payload["failures"] else 0)
+        checked = check_path(args.check)
+        failures = 0
+        for path, payload in checked:
+            print(
+                f"{path}: valid {_FORMAT} v{payload['schema_version']} — "
+                f"{len(payload['records'])} records, "
+                f"{len(payload['failures'])} failures, "
+                f"git {payload['git_rev']}, fast={payload['fast']}"
+            )
+            failures += len(payload["failures"])
+        if args.baseline:
+            # gate each record file on its own — merging would let a
+            # stale fast record shadow a regressed one on duplicate keys
+            gate_ok = True
+            for path, payload in checked:
+                print(f"# gating {path}", file=sys.stderr)
+                gate_ok &= run_gate(
+                    payload["records"], args.baseline, args.tolerance
+                )
+            if not gate_ok:
+                sys.exit(3)
+        sys.exit(1 if failures else 0)
 
     import importlib
 
@@ -171,6 +278,8 @@ def main(argv: list[str] | None = None) -> None:
     print(f"# wrote {out_path} ({len(records)} records)", file=sys.stderr)
     if failures:
         sys.exit(1)
+    if args.baseline and not run_gate(records, args.baseline, args.tolerance):
+        sys.exit(3)
 
 
 if __name__ == "__main__":

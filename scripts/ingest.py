@@ -1,0 +1,142 @@
+"""Convert a serialized model dump into a saved X-TIME CompiledModel.
+
+    python scripts/ingest.py model.json --out artifacts/churn
+    python scripts/ingest.py model.txt  --out artifacts/lgbm --n-bins 256
+    python scripts/ingest.py model.json --out a/m --expected golden.json
+
+Ingests an XGBoost-JSON / LightGBM-text / sklearn-forest dump with the
+zero-dependency parsers in ``repro.ingest`` (the source libraries are
+never imported), lowers it onto the threshold grid, compiles + places it
+(``repro.api.build``), prints the lowering report, and writes the
+``<out>.npz`` + ``<out>.json`` artifact a serve process cold-starts from
+(``TableRegistry.register(name, CompiledModel.load(out))``).
+
+``--expected`` verifies the saved artifact end-to-end: the recorded
+float queries are binned with the artifact's grid and served through the
+engine; raw margins and predictions must match the recorded reference
+bit-exactly (exit 1 otherwise) — the CI ``ingest-golden`` job runs this
+over every checked-in fixture.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.ingest import FORMATS, IngestError, load_model  # noqa: E402
+
+
+def verify_expected(artifact, expected_path: Path) -> int:
+    """Serve the recorded queries through the engine.
+
+    Predictions must be BIT-IDENTICAL to the record; engine raw margins
+    must sit within the float32 accumulation tolerance of the engine
+    contract (the matmul accumulation order differs from the reference
+    traversal by ~1 ULP — DESIGN.md §8; the bit-exact margin guarantee
+    is on the numpy lowering, covered by tests/test_ingest.py).
+    """
+    exp = json.loads(expected_path.read_text())
+    x = np.asarray(exp["x"], dtype=np.float64)
+    want_margin = np.asarray(exp["raw_margin"], dtype=np.float32)
+    want_pred = np.asarray(exp["predict"])
+    xb = artifact.bin(x)
+    engine = artifact.engine()
+    got_margin = np.asarray(engine.raw_margin(xb), dtype=np.float32)
+    got_pred = np.asarray(engine.predict(xb))
+    ok = True
+    if not np.allclose(got_margin, want_margin, rtol=1e-5, atol=1e-6):
+        bad = int((~np.isclose(got_margin, want_margin,
+                               rtol=1e-5, atol=1e-6)).sum())
+        print(f"[verify]  FAIL raw_margin: {bad}/{want_margin.size} cells "
+              "outside engine tolerance", file=sys.stderr)
+        ok = False
+    if artifact.table.task == "regression":
+        # regression "predictions" ARE the margins: engine tolerance
+        pred_ok = np.allclose(got_pred, want_pred, rtol=1e-5, atol=1e-6)
+    else:
+        pred_ok = np.array_equal(
+            np.asarray(got_pred, dtype=want_pred.dtype), want_pred
+        )
+    if not pred_ok:
+        print("[verify]  FAIL predict: outputs differ from the record",
+              file=sys.stderr)
+        ok = False
+    if ok:
+        print(f"[verify]  OK — {x.shape[0]} queries: predictions "
+              f"bit-identical, margins within engine tolerance "
+              f"({expected_path.name})")
+    return 0 if ok else 1
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("dump", help="model dump (XGBoost .json / LightGBM .txt / "
+                                 "sklearn-forest .json)")
+    ap.add_argument("--out", required=True, metavar="BASE",
+                    help="artifact base path (writes BASE.npz + BASE.json)")
+    ap.add_argument("--format", default="auto",
+                    choices=("auto",) + FORMATS)
+    ap.add_argument("--n-bins", type=int, default=256,
+                    help="threshold grid size (default: %(default)s — the "
+                         "paper's 8-bit grid)")
+    ap.add_argument("--strict", action="store_true",
+                    help="reject models whose thresholds do not fit the grid "
+                         "instead of merging (merging loses bit-exactness)")
+    ap.add_argument("--batching", action="store_true",
+                    help="build the §III-D input-batching router program")
+    ap.add_argument("--expected", metavar="JSON",
+                    help="golden reference {x, raw_margin, predict}; verify "
+                         "the saved artifact serves it bit-exactly")
+    args = ap.parse_args(argv)
+
+    from repro.api import CompiledModel, build  # lazy: --help stays instant
+    from repro.core.deploy import DeployConfig
+
+    try:
+        imported = load_model(args.dump, format=args.format)
+        artifact = build(
+            imported,
+            deploy=DeployConfig(batching=args.batching),
+            n_bins=args.n_bins,
+            on_overflow="raise" if args.strict else "merge",
+        )
+    except IngestError as e:
+        print(f"[ingest]  ERROR: {e}", file=sys.stderr)
+        return 1
+
+    rep = artifact.ingest or {}
+    print(f"[ingest]  {imported.source} ({imported.source_kind}, "
+          f"{imported.task}): {rep.get('n_source_trees')} trees -> "
+          f"{rep.get('n_trees')} lowered, {artifact.table.n_rows} CAM rows")
+    grid = [g for g in rep.get("grid", ()) if g["thresholds"]]
+    peak = max((g["thresholds"] for g in grid), default=0)
+    print(f"[grid]    {len(grid)}/{rep.get('n_features')} features split, "
+          f"peak {peak}/{args.n_bins - 1} edges, "
+          f"exact={rep.get('exact')} "
+          f"(merged={rep.get('merged_thresholds')}, "
+          f"remapped={rep.get('remapped_splits')})")
+    for note in rep.get("notes", ()):
+        print(f"[note]    {note}")
+    print(f"[place]   {artifact.placement.n_cores_used} cores, "
+          f"replication x{artifact.placement.replication}, "
+          f"NoC '{artifact.noc.config}', "
+          f"{artifact.table.feature_occupancy().mean():.0%} of CAM cells "
+          "non-wildcard")
+
+    sidecar = artifact.save(args.out)
+    print(f"[save]    {sidecar} (+ .npz)")
+
+    if args.expected:
+        reloaded = CompiledModel.load(args.out)  # verify the DISK artifact
+        return verify_expected(reloaded, Path(args.expected))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,8 @@
 Public API surface:
     repro.api        compiled-artifact API: ``build`` -> ``CompiledModel``
                      (save/load/engine) + ``DeployConfig``
+    repro.ingest     zero-dependency importers: XGBoost-JSON / LightGBM-text /
+                     sklearn-dict dumps -> ``ImportedEnsemble`` -> ``build``
     repro.core       the paper's contribution (tree training, CAM compile, engine)
     repro.kernels    Pallas TPU kernels (cam_match) + jnp oracles
     repro.serve      multi-model registry + micro-batching serve loop
@@ -31,10 +33,10 @@ def __getattr__(name: str):
         value = getattr(importlib.import_module(_LAZY[name]), name)
         globals()[name] = value
         return value
-    if name == "api":
-        return importlib.import_module("repro.api")
+    if name in ("api", "ingest"):
+        return importlib.import_module(f"repro.{name}")
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__() -> list[str]:
-    return sorted(set(globals()) | set(_LAZY) | {"api"})
+    return sorted(set(globals()) | set(_LAZY) | {"api", "ingest"})

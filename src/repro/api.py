@@ -42,6 +42,7 @@ from repro.core.compile import (
 from repro.core.deploy import DeployConfig
 from repro.core.noc import NoCPlan, plan_noc
 from repro.core.perfmodel import PerfReport, xtime_perf
+from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import Ensemble
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
@@ -75,6 +76,11 @@ class CompiledModel:
     noc: NoCPlan
     perf: PerfReport
     deploy: DeployConfig
+    # ingestion extras (None for natively trained models): the grid the
+    # model was lowered onto — needed to bin float queries at serve time
+    # — and the lowering's validation report (sidecar provenance)
+    quantizer: "FeatureQuantizer | None" = None
+    ingest: dict | None = None
 
     def __post_init__(self) -> None:
         # per-instance engine cache (frozen dataclass => set via object)
@@ -157,10 +163,16 @@ class CompiledModel:
         base = _base_path(path)
         base.parent.mkdir(parents=True, exist_ok=True)
         t = self.table
-        np.savez_compressed(
-            _sibling(base, ".npz"),
-            **{name: getattr(t, name) for name in _TABLE_ARRAYS},
-        )
+        arrays = {name: getattr(t, name) for name in _TABLE_ARRAYS}
+        if self.quantizer is not None:
+            # ragged per-feature edges stored flat + offsets
+            edges = self.quantizer.edges
+            arrays["q_edges"] = (np.concatenate(edges) if edges
+                                 else np.zeros(0, dtype=np.float64))
+            arrays["q_offsets"] = np.cumsum(
+                [0] + [e.shape[0] for e in edges]
+            ).astype(np.int64)
+        np.savez_compressed(_sibling(base, ".npz"), **arrays)
         sidecar = {
             "format": _FORMAT,
             "schema_version": SCHEMA_VERSION,
@@ -176,6 +188,10 @@ class CompiledModel:
             "perf": dataclasses.asdict(self.perf),
             "deploy": self.deploy.to_dict(),
         }
+        if self.quantizer is not None:
+            sidecar["quantizer"] = {"n_bins": self.quantizer.n_bins}
+        if self.ingest is not None:
+            sidecar["ingest"] = self.ingest
         out = _sibling(base, ".json")
         out.write_text(json.dumps(sidecar, indent=1))
         return out
@@ -199,6 +215,14 @@ class CompiledModel:
             )
         with np.load(_sibling(base, ".npz")) as npz:
             arrays = {name: npz[name] for name in _TABLE_ARRAYS}
+            quantizer = None
+            if "quantizer" in sidecar and "q_offsets" in npz:
+                flat, off = npz["q_edges"], npz["q_offsets"]
+                quantizer = FeatureQuantizer(
+                    edges=[flat[off[i]:off[i + 1]].astype(np.float64)
+                           for i in range(off.shape[0] - 1)],
+                    n_bins=int(sidecar["quantizer"]["n_bins"]),
+                )
         table = CAMTable(**arrays, **sidecar["table"])
         chip = ChipSpec(**sidecar["chip"])
         placement = CorePlacement(spec=chip, **sidecar["placement"])
@@ -208,8 +232,26 @@ class CompiledModel:
         perf = PerfReport(**sidecar["perf"])
         deploy = DeployConfig.from_dict(sidecar["deploy"])
         return cls(
-            table=table, placement=placement, noc=noc, perf=perf, deploy=deploy
+            table=table, placement=placement, noc=noc, perf=perf,
+            deploy=deploy, quantizer=quantizer,
+            ingest=sidecar.get("ingest"),
         )
+
+    # -- ingested-model serving ----------------------------------------------
+
+    def bin(self, x: np.ndarray) -> np.ndarray:
+        """Float queries -> the integer bins this artifact's tables index.
+
+        Only artifacts built from an ingested model (or with an explicit
+        quantizer) carry the grid; native callers hold their own
+        ``FeatureQuantizer``.
+        """
+        if self.quantizer is None:
+            raise ValueError(
+                "this artifact has no feature grid attached; bin queries "
+                "with the FeatureQuantizer the model was trained on"
+            )
+        return self.quantizer.transform(np.asarray(x))
 
     # -- introspection -------------------------------------------------------
 
@@ -244,31 +286,57 @@ def _sibling(base: Path, suffix: str) -> Path:
 
 
 def build(
-    model: Ensemble | CAMTable,
+    model,
     *,
     deploy: DeployConfig | None = None,
     chip: ChipSpec | None = None,
+    n_bins: int = 256,
+    on_overflow: str = "merge",
+    quantizer: FeatureQuantizer | None = None,
 ) -> CompiledModel:
     """Compile ``model`` into a portable, serializable ``CompiledModel``.
 
     The one-call replacement for the hand-wired ``compile_ensemble ->
     pack_cores -> plan_noc -> xtime_perf -> XTimeEngine`` pipeline.
+    ``model`` may be a native ``Ensemble``, a pre-compiled ``CAMTable``,
+    an ``repro.ingest.ImportedEnsemble``, or a path to a serialized dump
+    (XGBoost JSON / LightGBM text / sklearn-forest dict) — the last two
+    run the ingestion frontend: the model is lowered onto an ``n_bins``
+    threshold grid built from its own split points (``on_overflow``
+    governs grids that don't fit) and the artifact carries the grid
+    (``CompiledModel.bin``) plus the lowering report in its sidecar.
+
     ``deploy.batching`` selects the §III-D input-batching router program;
     ``chip`` overrides the architecture constants (defaults to the
-    paper's 4096-core chip).
+    paper's 4096-core chip); ``quantizer`` attaches a float->bin grid to
+    a natively trained model's artifact.
     """
     deploy = deploy or DeployConfig()
+    ingest_report = None
+    if not isinstance(model, (Ensemble, CAMTable)):
+        # ingestion frontend, imported lazily: artifact load/serve paths
+        # never pay for the parsers
+        from repro.ingest import ImportedEnsemble, load_model, lower_to_ensemble
+
+        if isinstance(model, (str, Path)):
+            model = load_model(model)
+        if not isinstance(model, ImportedEnsemble):
+            raise TypeError(
+                "build() takes an Ensemble, CAMTable, ImportedEnsemble or "
+                f"dump path, got {type(model).__name__}"
+            )
+        model, quantizer, report = lower_to_ensemble(
+            model, n_bins=n_bins, on_overflow=on_overflow
+        )
+        ingest_report = report.to_dict()
     if isinstance(model, CAMTable):
         table = model
-    elif isinstance(model, Ensemble):
-        table = compile_ensemble(model)
     else:
-        raise TypeError(
-            f"build() takes an Ensemble or CAMTable, got {type(model).__name__}"
-        )
+        table = compile_ensemble(model)
     placement = pack_cores(table, chip)
     noc = plan_noc(table, placement, batching=deploy.batching)
     perf = xtime_perf(table, placement, noc)
     return CompiledModel(
-        table=table, placement=placement, noc=noc, perf=perf, deploy=deploy
+        table=table, placement=placement, noc=noc, perf=perf, deploy=deploy,
+        quantizer=quantizer, ingest=ingest_report,
     )

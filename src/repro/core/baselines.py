@@ -92,6 +92,6 @@ class TraversalBaseline:
         ens = self.ens
         if ens.task == "regression":
             return m[:, 0]
-        if ens.task == "binary" and ens.kind == "gbdt":
+        if ens.n_outputs == 1:  # single-logit binary: sign test
             return (m[:, 0] > 0.0).astype(np.int32)
         return np.argmax(m, axis=1).astype(np.int32)

@@ -49,6 +49,13 @@ class CAMTable:
         dc = (self.low == 0) & (self.high == self.n_bins)
         return float(dc.mean())
 
+    def feature_occupancy(self) -> np.ndarray:
+        """(F,) fraction of rows with a real (non-wildcard) range per
+        feature — how hard each queued-array column works
+        (``scripts/ingest.py`` prints the mean for ingested tables)."""
+        dc = (self.low == 0) & (self.high == self.n_bins)
+        return 1.0 - dc.mean(axis=0)
+
     def leaf_matrix(self) -> np.ndarray:
         """(R, n_outputs) leaf values scattered to their class channel.
 
@@ -60,8 +67,32 @@ class CAMTable:
         return m
 
 
+def validate_ensemble(ens: Ensemble) -> None:
+    """Structural preconditions of the compiler, checked up front so a
+    malformed model (hand-built or ingested) fails with a diagnosis
+    instead of an index error mid-traversal."""
+    F, B = ens.n_features, ens.n_bins
+    for i, tree in enumerate(ens.trees):
+        n = tree.n_nodes
+        internal = tree.feature >= 0
+        if np.any(tree.feature >= F):
+            raise ValueError(f"tree {i}: split feature >= n_features={F}")
+        t = tree.threshold[internal]
+        if t.size and (t.min() < 1 or t.max() > B - 1):
+            raise ValueError(
+                f"tree {i}: bin threshold outside [1, {B - 1}] "
+                f"(n_bins={B}) — was the model lowered onto this grid?"
+            )
+        kids = np.concatenate([tree.left[internal], tree.right[internal]])
+        if kids.size and (kids.min() < 0 or kids.max() >= n):
+            raise ValueError(f"tree {i}: child index outside [0, {n})")
+    if ens.leaf_class_mode == "leaf" and len(ens.leaf_class) != ens.n_trees:
+        raise ValueError("leaf_class_mode='leaf' needs leaf_class per tree")
+
+
 def compile_ensemble(ens: Ensemble) -> CAMTable:
     """Traverse every tree, emit one CAM row per leaf."""
+    validate_ensemble(ens)
     F, B = ens.n_features, ens.n_bins
     lows: list[np.ndarray] = []
     highs: list[np.ndarray] = []

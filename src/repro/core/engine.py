@@ -184,6 +184,11 @@ class XTimeEngine:
             table.low, table.high, table.leaf_matrix(),
             r_blk=row_mult, c_mult=config.c_mult, n_bins=table.n_bins,
         )
+        if config.mode == "inclusive":
+            # the compact cell mode compares low <= q <= high: store
+            # inclusive upper bounds (always-match n_bins-1; never-match
+            # padding rows become high=-1 < low, still unmatchable)
+            high = high - 1
         self.arrays = EngineArrays(
             low=jnp.asarray(low),
             high=jnp.asarray(high),
@@ -311,7 +316,7 @@ class XTimeEngine:
                 return m
             if table.task == "regression":
                 return m[:, 0]
-            if table.task == "binary" and table.kind == "gbdt":
+            if table.n_outputs == 1:  # single-logit binary: sign test
                 return (m[:, 0] > 0.0).astype(jnp.int32)
             return jnp.argmax(m, axis=1).astype(jnp.int32)
 

@@ -28,6 +28,51 @@ class FeatureQuantizer:
         return len(self.edges)
 
     @staticmethod
+    def from_thresholds(
+        thresholds: list[np.ndarray],
+        n_bins: int = 256,
+        on_overflow: str = "merge",
+    ) -> tuple["FeatureQuantizer", list[int]]:
+        """Build the grid directly from a model's own split points (§III-B).
+
+        Ingestion path: instead of fitting quantiles on training data, the
+        per-feature edge set IS the sorted unique thresholds of the
+        imported ensemble, so every split lands exactly on a grid edge and
+        binned inference is bit-identical to float inference.
+
+        A feature may carry at most ``n_bins - 1`` distinct thresholds.
+        Beyond that, ``on_overflow='merge'`` keeps an evenly-spaced
+        subsample (nearest-edge remapping then loses exactness — the
+        ingest report records every merged threshold), while ``'raise'``
+        rejects the model.  Returns ``(quantizer, merged_per_feature)``.
+        """
+        if not 2 <= n_bins <= 65536:
+            raise ValueError(f"n_bins must be in [2, 65536], got {n_bins}")
+        if on_overflow not in ("merge", "raise"):
+            raise ValueError(f"on_overflow {on_overflow!r} not in (merge, raise)")
+        edges: list[np.ndarray] = []
+        merged: list[int] = []
+        cap = n_bins - 1
+        for f, th in enumerate(thresholds):
+            e = np.unique(np.asarray(th, dtype=np.float64))
+            if not np.all(np.isfinite(e)):
+                raise ValueError(f"feature {f}: non-finite threshold")
+            if e.shape[0] > cap:
+                if on_overflow == "raise":
+                    raise ValueError(
+                        f"feature {f}: {e.shape[0]} distinct thresholds exceed "
+                        f"the {cap}-edge grid (n_bins={n_bins}); raise n_bins "
+                        "or allow on_overflow='merge'"
+                    )
+                keep = np.round(np.linspace(0, e.shape[0] - 1, cap)).astype(int)
+                merged.append(e.shape[0] - cap)
+                e = e[np.unique(keep)]
+            else:
+                merged.append(0)
+            edges.append(e)
+        return FeatureQuantizer(edges=edges, n_bins=n_bins), merged
+
+    @staticmethod
     def fit(x: np.ndarray, n_bins: int = 256) -> "FeatureQuantizer":
         """Quantile cuts per feature; duplicate quantiles are collapsed."""
         if not 2 <= n_bins <= 65536:
@@ -67,3 +112,22 @@ class FeatureQuantizer:
     def threshold_value(self, f: int, t: int) -> float:
         """Float-space threshold for split 'bin < t' (x < edges[t-1])."""
         return float(self.edges[f][t - 1])
+
+    def bin_of_threshold(self, f: int, v: float) -> tuple[int, bool]:
+        """Bin split point ``t`` realizing float split ``x < v`` as
+        ``bin < t``, plus whether the mapping is exact.
+
+        Exact iff ``v`` is a grid edge (always true on an unmerged
+        ``from_thresholds`` grid); otherwise the nearest edge is used —
+        the ingest report counts these remapped splits.
+        """
+        e = self.edges[f]
+        if e.shape[0] == 0:
+            raise ValueError(f"feature {f} has no grid edges to split on")
+        i = int(np.searchsorted(e, v, side="left"))
+        if i < e.shape[0] and e[i] == v:
+            return i + 1, True
+        lo = max(i - 1, 0)
+        hi = min(i, e.shape[0] - 1)
+        j = lo if abs(e[lo] - v) <= abs(e[hi] - v) else hi
+        return j + 1, False

@@ -114,6 +114,10 @@ class Ensemble:
     # 'leaf': class id varies per leaf (RF classification majority vote).
     leaf_class_mode: Literal["tree", "leaf"] = "tree"
     leaf_class: list[np.ndarray] = field(default_factory=list)  # per tree (n_nodes,)
+    # imported models (repro.ingest) may carry margin layouts the native
+    # trainers never produce, e.g. a summing binary forest with one
+    # probability lane per class; None keeps the native derivation
+    n_outputs_override: int | None = None
 
     @property
     def n_trees(self) -> int:
@@ -122,6 +126,8 @@ class Ensemble:
     @property
     def n_outputs(self) -> int:
         """Width of the raw margin vector (number of accumulator channels)."""
+        if self.n_outputs_override is not None:
+            return self.n_outputs_override
         if self.task == "multiclass":
             return self.n_classes
         if self.kind == "rf" and self.task == "binary":
@@ -157,14 +163,17 @@ class Ensemble:
         return out.astype(np.float32)
 
     def predict(self, xb: np.ndarray) -> np.ndarray:
-        """Final model prediction (class id / regression value) — the CP op."""
+        """Final model prediction (class id / regression value) — the CP op.
+
+        Classification decides by margin layout: a single channel is a
+        logit (sign test), several channels are per-class scores (argmax)
+        — covering native GBDT/RF and every imported-ensemble layout.
+        """
         margin = self.raw_margin(xb)
         if self.task == "regression":
             return margin[:, 0]
-        if self.task == "binary":
-            if self.kind == "gbdt":
-                return (margin[:, 0] > 0.0).astype(np.int32)
-            return np.argmax(margin, axis=1).astype(np.int32)
+        if margin.shape[1] == 1:
+            return (margin[:, 0] > 0.0).astype(np.int32)
         return np.argmax(margin, axis=1).astype(np.int32)
 
 

@@ -111,8 +111,10 @@ class TableRegistry:
         """Install ``model`` under ``name`` (compiling only if needed).
 
         ``Ensemble`` / ``CAMTable`` inputs run the compiler pipeline via
-        ``repro.api.build``; a ``CompiledModel`` is installed as-is — the
-        serve cold-start path recompiles nothing.  Registering an existing
+        ``repro.api.build`` (as does an ``repro.ingest.ImportedEnsemble``
+        or a dump path, which ``build`` lowers first); a
+        ``CompiledModel`` is installed as-is — the serve cold-start path
+        recompiles nothing.  Registering an existing
         name is the hot-swap path: the entry is replaced atomically and
         its version incremented, with the previous registration's
         ``batching``/deploy settings carried over unless overridden.

@@ -1,0 +1,292 @@
+"""Generator for the checked-in golden ingestion fixtures.
+
+Run once (``PYTHONPATH=src python tests/fixtures/ingest/make_fixtures.py``)
+to (re)emit every dump + its ``*.expected.json`` reference.  The outputs
+are FROZEN in git — tests and the CI ``ingest-golden`` job read the
+files, never this generator — so regenerating after a semantics change
+is a reviewable diff, not a silent re-record.
+
+Each fixture is a small hand-shaped model (deterministic rng) written in
+the target library's serialization format by hand — the source libraries
+are not installed in this repo, which is the point: the parsers must
+understand the *format*, not the library.  The expected ``raw_margin`` /
+``predict`` are recorded from the lowered ``Ensemble`` (pure numpy,
+float64 accumulation — deterministic on every host); engine margins are
+asserted close to and predictions bit-equal against the same record.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.ingest import load_model, lower_to_ensemble
+
+HERE = Path(__file__).resolve().parent
+N_QUERIES = 32
+
+
+def _rand_tree(rng: np.random.Generator, n_features: int, n_nodes: int,
+               value_scale: float = 1.0) -> dict:
+    """Random well-formed tree in xgboost array layout (strict-< splits).
+
+    Nodes are allocated breadth-first: node j splits while the frontier
+    still has room, guaranteeing parents precede children.
+    """
+    assert n_nodes % 2 == 1, "binary trees have odd node counts"
+    feature = np.full(n_nodes, -1, dtype=np.int64)
+    threshold = np.zeros(n_nodes)
+    left = np.full(n_nodes, -1, dtype=np.int64)
+    right = np.full(n_nodes, -1, dtype=np.int64)
+    value = np.zeros(n_nodes)
+    next_free = 1
+    for j in range(n_nodes):
+        if next_free + 1 < n_nodes + 1 and next_free + 2 <= n_nodes:
+            feature[j] = rng.integers(0, n_features)
+            # quarter-grid thresholds: varied but exactly representable
+            threshold[j] = float(rng.integers(-8, 9)) / 4.0
+            left[j] = next_free
+            right[j] = next_free + 1
+            next_free += 2
+        else:
+            value[j] = round(float(rng.normal()) * value_scale, 3)
+    return {
+        "feature": feature, "threshold": threshold,
+        "left": left, "right": right, "value": value,
+    }
+
+
+def _xgb_tree_json(t: dict, tree_id: int, n_features: int) -> dict:
+    is_leaf = t["feature"] < 0
+    n = len(t["feature"])
+    return {
+        "base_weights": [0.0] * n,
+        "categories": [], "categories_nodes": [],
+        "categories_segments": [], "categories_sizes": [],
+        "default_left": [0] * n,
+        "id": tree_id,
+        "left_children": t["left"].tolist(),
+        "loss_changes": [0.0] * n,
+        "parents": [2147483647] * n,
+        "right_children": t["right"].tolist(),
+        "split_conditions": np.where(is_leaf, t["value"], t["threshold"]).tolist(),
+        "split_indices": np.maximum(t["feature"], 0).tolist(),
+        "split_type": [0] * n,
+        "sum_hessian": [1.0] * n,
+        "tree_param": {"num_deleted": "0", "num_feature": str(n_features),
+                       "num_nodes": str(n), "size_leaf_vector": "1"},
+    }
+
+
+def _xgb_doc(trees: list[dict], *, objective: str, n_features: int,
+             base_score: float, num_class: int = 0,
+             tree_info: list[int] | None = None,
+             dart_weights: list[float] | None = None) -> dict:
+    trees_json = [_xgb_tree_json(t, i, n_features) for i, t in enumerate(trees)]
+    model = {
+        "gbtree_model_param": {"num_parallel_tree": "1",
+                               "num_trees": str(len(trees))},
+        "tree_info": tree_info or [0] * len(trees),
+        "trees": trees_json,
+    }
+    if dart_weights is None:
+        booster = {"model": model, "name": "gbtree"}
+    else:
+        booster = {"gbtree": {"model": model, "name": "gbtree"},
+                   "name": "dart", "weight_drop": dart_weights}
+    return {
+        "learner": {
+            "attributes": {}, "feature_names": [], "feature_types": [],
+            "gradient_booster": booster,
+            "learner_model_param": {
+                "base_score": repr(base_score), "boost_from_average": "1",
+                "num_class": str(num_class), "num_feature": str(n_features),
+                "num_target": "1",
+            },
+            "objective": {"name": objective},
+        },
+        "version": [2, 0, 0],
+    }
+
+
+def _lgbm_tree_text(idx: int, *, num_leaves: int, split_feature, threshold,
+                    decision_type, left_child, right_child, leaf_value,
+                    num_cat: int = 0, cat_boundaries=None, cat_threshold=None
+                    ) -> str:
+    def row(name, vals):
+        return f"{name}=" + " ".join(str(v) for v in vals)
+    n_int = num_leaves - 1
+    lines = [
+        f"Tree={idx}", f"num_leaves={num_leaves}", f"num_cat={num_cat}",
+        row("split_feature", split_feature),
+        row("split_gain", [1.0] * n_int),
+        row("threshold", threshold),
+        row("decision_type", decision_type),
+        row("left_child", left_child),
+        row("right_child", right_child),
+        row("leaf_value", leaf_value),
+        row("leaf_weight", [1.0] * num_leaves),
+        row("leaf_count", [1] * num_leaves),
+        row("internal_value", [0.0] * n_int),
+        row("internal_weight", [0.0] * n_int),
+        row("internal_count", [0] * n_int),
+    ]
+    if num_cat:
+        lines.append(row("cat_boundaries", cat_boundaries))
+        lines.append(row("cat_threshold", cat_threshold))
+    lines += ["is_linear=0", "shrinkage=0.1"]
+    return "\n".join(lines)
+
+
+def _lgbm_doc(trees_text: list[str], *, objective: str, n_features: int,
+              num_class: int = 1, per_iter: int = 1) -> str:
+    header = "\n".join([
+        "tree", "version=v4", f"num_class={num_class}",
+        f"num_tree_per_iteration={per_iter}", "label_index=0",
+        f"max_feature_idx={n_features - 1}", f"objective={objective}",
+        "feature_names=" + " ".join(f"f{i}" for i in range(n_features)),
+        "feature_infos=" + " ".join("none" for _ in range(n_features)),
+    ])
+    return (header + "\n\n" + "\n\n".join(trees_text)
+            + "\n\nend of trees\n\nparameters:\n[boosting: gbdt]\n"
+              "\nend of parameters\n")
+
+
+def _sk_tree(t: dict, value) -> dict:
+    # back to sklearn conventions: leaf marker -2, <= thresholds.  The
+    # generator's strict-< quarter-grid thresholds shift down one float
+    # so that `x <= nextafter-normalized threshold` reproduces `x < t`.
+    is_leaf = t["feature"] < 0
+    le_threshold = np.where(is_leaf, -2.0, np.nextafter(t["threshold"], -np.inf))
+    return {
+        "feature": np.where(is_leaf, -2, t["feature"]).tolist(),
+        "threshold": le_threshold.tolist(),
+        "children_left": t["left"].tolist(),
+        "children_right": t["right"].tolist(),
+        "value": value,
+    }
+
+
+def _record(path: Path, rng: np.random.Generator) -> None:
+    """Lower the dump and freeze queries + reference outputs beside it."""
+    imported = load_model(path)
+    ens, quant, report = lower_to_ensemble(imported)
+    x = np.round(rng.uniform(-3, 3, size=(N_QUERIES, imported.n_features)), 2)
+    xb = quant.transform(x)
+    margin = ens.raw_margin(xb)
+    pred = ens.predict(xb)
+    assert np.array_equal(margin, imported.raw_margin(x)), path.name
+    assert report.exact, path.name
+    if ens.task == "binary" and margin.shape[1] == 1:
+        # the engine margin contract is ~1 ULP: keep the sign test far
+        # from the decision boundary so predictions stay bit-stable
+        assert np.abs(margin).min() > 1e-4, f"{path.name}: margin at boundary"
+    out = path.with_name(path.name.rsplit(".", 1)[0] + ".expected.json")
+    out.write_text(json.dumps({
+        "dump": path.name,
+        "x": x.tolist(),
+        "raw_margin": [[float(v) for v in row] for row in margin],
+        "predict": [float(v) if ens.task == "regression" else int(v)
+                    for v in pred],
+    }, indent=1))
+    print(f"  {path.name}: {imported.n_trees} trees -> "
+          f"{ens.total_leaves} rows, {report.occupancy_summary()}")
+
+
+def main() -> None:
+    rng = np.random.default_rng(20260730)
+    F = 5
+
+    # 1. XGBoost gbtree, binary:logistic with a nontrivial base_score
+    trees = [_rand_tree(rng, F, 9) for _ in range(3)]
+    (HERE / "xgb_binary.json").write_text(json.dumps(
+        _xgb_doc(trees, objective="binary:logistic", n_features=F,
+                 base_score=0.25), indent=1))
+
+    # 2. XGBoost gbtree, multi:softprob, 2 rounds x 3 classes
+    trees = [_rand_tree(rng, F, 7) for _ in range(6)]
+    (HERE / "xgb_multi.json").write_text(json.dumps(
+        _xgb_doc(trees, objective="multi:softprob", n_features=F,
+                 base_score=0.5, num_class=3,
+                 tree_info=[0, 1, 2, 0, 1, 2]), indent=1))
+
+    # 3. XGBoost DART regression: weight_drop folded into leaves
+    trees = [_rand_tree(rng, F, 9) for _ in range(4)]
+    (HERE / "xgb_dart_reg.json").write_text(json.dumps(
+        _xgb_doc(trees, objective="reg:squarederror", n_features=F,
+                 base_score=1.5, dart_weights=[1.0, 0.75, 0.5, 0.25]),
+        indent=1))
+
+    # 4. LightGBM binary with one categorical split (bitset {0,1,3,6,7})
+    t0 = _lgbm_tree_text(
+        0, num_leaves=3, split_feature=[0, 1],
+        threshold=[0.5, -1.25], decision_type=[2, 2],
+        left_child=[1, -1], right_child=[-2, -3],
+        leaf_value=[0.12, -0.27, 0.31])
+    t1 = _lgbm_tree_text(
+        1, num_leaves=2, split_feature=[2],
+        threshold=[0], decision_type=[1],
+        left_child=[-1], right_child=[-2],
+        leaf_value=[0.45, -0.52],
+        num_cat=1, cat_boundaries=[0, 1], cat_threshold=[0b11001011])
+    (HERE / "lgbm_binary.txt").write_text(
+        _lgbm_doc([t0, t1], objective="binary sigmoid:1", n_features=3))
+
+    # 5. LightGBM multiclass: 2 rounds x 3 classes, interleaved
+    trees_text = []
+    for i in range(6):
+        t = _rand_tree(rng, 4, 5)
+        internal = t["feature"] >= 0
+        # map array layout to lgbm child encoding: leaves get ~leaf_idx
+        leaf_pos = {j: k for k, j in enumerate(np.flatnonzero(~internal))}
+        def child(c):
+            return int(c) if t["feature"][c] >= 0 else ~leaf_pos[int(c)]
+        int_nodes = np.flatnonzero(internal)
+        remap = {j: k for k, j in enumerate(int_nodes)}
+        trees_text.append(_lgbm_tree_text(
+            i, num_leaves=int((~internal).sum()),
+            split_feature=[int(t["feature"][j]) for j in int_nodes],
+            threshold=[t["threshold"][j] for j in int_nodes],
+            decision_type=[2] * len(int_nodes),
+            left_child=[(remap[int(t["left"][j])]
+                         if t["feature"][t["left"][j]] >= 0
+                         else child(t["left"][j])) for j in int_nodes],
+            right_child=[(remap[int(t["right"][j])]
+                          if t["feature"][t["right"][j]] >= 0
+                          else child(t["right"][j])) for j in int_nodes],
+            leaf_value=[t["value"][j] for j in np.flatnonzero(~internal)]))
+    (HERE / "lgbm_multi.txt").write_text(
+        _lgbm_doc(trees_text, objective="multiclass num_class:3",
+                  n_features=4, num_class=3, per_iter=3))
+
+    # 6. sklearn RandomForestClassifier dict (class-count leaf rows)
+    sk_trees = []
+    for _ in range(4):
+        t = _rand_tree(rng, F, 7)
+        counts = np.zeros((7, 3))
+        for j in np.flatnonzero(t["feature"] < 0):
+            counts[j] = rng.integers(0, 9, size=3) + [1, 0, 0]
+        sk_trees.append(_sk_tree(t, counts.tolist()))
+    (HERE / "sk_rf_cls.json").write_text(json.dumps({
+        "format": "sklearn-forest", "kind": "rf", "task": "multiclass",
+        "n_features": F, "n_classes": 3, "trees": sk_trees}, indent=1))
+
+    # 7. sklearn GradientBoostingRegressor dict (init + learning_rate)
+    sk_trees = [_sk_tree(t, t["value"].tolist())
+                for t in (_rand_tree(rng, F, 9) for _ in range(5))]
+    (HERE / "sk_gbdt_reg.json").write_text(json.dumps({
+        "format": "sklearn-forest", "kind": "gbdt", "task": "regression",
+        "n_features": F, "n_classes": 1, "learning_rate": 0.1,
+        "init": 2.125, "trees": sk_trees}, indent=1))
+
+    print("fixtures:")
+    for name in ("xgb_binary.json", "xgb_multi.json", "xgb_dart_reg.json",
+                 "lgbm_binary.txt", "lgbm_multi.txt", "sk_rf_cls.json",
+                 "sk_gbdt_reg.json"):
+        _record(HERE / name, rng)
+
+
+if __name__ == "__main__":
+    main()

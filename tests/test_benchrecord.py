@@ -63,6 +63,118 @@ def test_bench_record_check_mode(bench_file, tmp_path):
     assert bad.returncode != 0
 
 
+def test_check_mode_globs_directories(bench_file, tmp_path):
+    """--check on a directory validates every BENCH_*.json inside."""
+    import shutil
+
+    shutil.copy(bench_file, tmp_path / "BENCH_one.json")
+    shutil.copy(bench_file, tmp_path / "BENCH_two.json")
+    ok = _run_driver(["--check", str(tmp_path)], tmp_path)
+    assert ok.returncode == 0, ok.stderr[-2000:]
+    assert ok.stdout.count("valid xtime-bench") == 2
+
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    bad = _run_driver(["--check", str(empty)], tmp_path)
+    assert bad.returncode != 0
+
+
+# -- baseline regression gate --------------------------------------------------
+
+
+def _payload(entries: dict[tuple[str, str], float]) -> dict:
+    return {
+        "format": "xtime-bench", "schema_version": 1, "git_rev": "base123",
+        "fast": True, "env": {}, "failures": [],
+        "records": [
+            {"module": m, "name": n, "us_per_call": us, "derived": "",
+             "config": None, "git_rev": "base123"}
+            for (m, n), us in entries.items()
+        ],
+    }
+
+
+def test_gate_passes_within_tolerance_and_reports_changes():
+    from benchmarks.run import compare_to_baseline
+
+    baseline = _payload({("m", "a"): 100.0, ("m", "gone"): 5.0})
+    current = _payload({("m", "a"): 120.0, ("m", "new"): 9.0})["records"]
+    regressions, lines = compare_to_baseline(current, baseline, 25.0)
+    assert regressions == []
+    text = "\n".join(lines)
+    assert "new" in text and "missing" in text
+
+
+def test_gate_fails_on_synthetic_regression_beyond_tolerance(
+        bench_file, tmp_path):
+    """The acceptance-criteria demo: a >tolerance slowdown must fail CI."""
+    from benchmarks.run import compare_to_baseline
+
+    baseline = _payload({("m", "a"): 100.0, ("m", "b"): 10.0})
+    current = _payload({("m", "a"): 160.0, ("m", "b"): 10.0})["records"]
+    regressions, _ = compare_to_baseline(current, baseline, 50.0)
+    assert [r["name"] for r in regressions] == ["a"]
+    assert regressions[0]["ratio"] == pytest.approx(1.6)
+
+    # end to end through the CLI, exactly as the bench-smoke job runs it:
+    # a current record 4x slower than its baseline on one entry
+    cur_path = tmp_path / "cur" / "BENCH_cur.json"
+    cur_path.parent.mkdir()
+    cur_path.write_text(json.dumps(
+        _payload({("m", "a"): 400.0, ("m", "b"): 10.0})))
+    base_path = tmp_path / "BENCH_baseline.json"
+    base_path.write_text(json.dumps(
+        _payload({("m", "a"): 100.0, ("m", "b"): 10.0})))
+    proc = _run_driver(
+        ["--check", str(cur_path.parent), "--baseline", str(base_path),
+         "--tolerance", "50"], tmp_path,
+    )
+    assert proc.returncode == 3, proc.stderr[-2000:]
+    assert "PERF REGRESSION" in proc.stderr
+    # a second, fast record in the same dir must NOT mask the regression
+    # (each file is gated on its own)
+    (cur_path.parent / "BENCH_zzz.json").write_text(json.dumps(
+        _payload({("m", "a"): 100.0, ("m", "b"): 10.0})))
+    proc = _run_driver(
+        ["--check", str(cur_path.parent), "--baseline", str(base_path),
+         "--tolerance", "50"], tmp_path,
+    )
+    assert proc.returncode == 3, proc.stderr[-2000:]
+    # and with generous tolerance the same comparison passes
+    proc = _run_driver(
+        ["--check", str(cur_path.parent), "--baseline", str(base_path),
+         "--tolerance", "500"], tmp_path,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "baseline gate: OK" in proc.stderr
+
+
+def test_committed_baseline_is_valid_and_covers_smoke_modules():
+    from benchmarks.run import check_file
+
+    payload = check_file(
+        os.path.join(ROOT, "benchmarks", "baselines", "BENCH_baseline.json")
+    )
+    assert not payload["failures"]
+    modules = {r["module"] for r in payload["records"]}
+    assert {"fig11_scaling", "serve_bench", "ingest_bench"} <= modules
+
+
+def test_aggregate_bench_trajectory(bench_file, tmp_path, capsys):
+    from benchmarks.aggregate import bench_table, load_bench_records
+
+    import shutil
+    shutil.copy(bench_file, tmp_path / "BENCH_run.json")
+    payloads = load_bench_records(
+        [os.path.join(ROOT, "benchmarks", "baselines"), str(tmp_path)]
+    )
+    assert len(payloads) == 2
+    table = bench_table(payloads)
+    assert table.startswith("| module/name |")
+    assert "fig8_area_power" in table
+    assert bench_table([]).startswith("(no BENCH_")
+
+
 def test_validator_rejects_malformed_payloads():
     from benchmarks.run import validate_payload
 

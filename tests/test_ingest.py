@@ -1,0 +1,339 @@
+"""Ingestion frontend: golden-fixture bit-exactness across all cell
+modes, malformed-dump error paths, threshold-grid mapping, and the
+native -> XGBoost-JSON -> native round trip."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.api import CompiledModel, build
+from repro.core.compile import compile_ensemble, validate_ensemble
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, train_gbdt
+from repro.ingest import (
+    IngestError,
+    detect_format,
+    import_lightgbm_text,
+    import_sklearn_dict,
+    import_xgboost_json,
+    load_model,
+    lower_to_ensemble,
+    to_xgboost_json,
+)
+from repro.serve import TableRegistry
+
+FIXTURES = Path(__file__).parent / "fixtures" / "ingest"
+DUMPS = sorted(
+    p for p in FIXTURES.iterdir()
+    if p.suffix in (".json", ".txt") and ".expected" not in p.name
+    and p.name != "make_fixtures.py"
+)
+CELL_MODES = ("direct", "inclusive", "msb_lsb", "two_cycle")
+
+
+def _expected(dump: Path) -> dict:
+    exp = json.loads(
+        (dump.with_name(dump.name.rsplit(".", 1)[0] + ".expected.json"))
+        .read_text()
+    )
+    exp["x"] = np.asarray(exp["x"], dtype=np.float64)
+    exp["raw_margin"] = np.asarray(exp["raw_margin"], dtype=np.float32)
+    exp["predict"] = np.asarray(exp["predict"])
+    return exp
+
+
+def test_fixture_set_is_complete():
+    """All three formats are represented in the golden set."""
+    sources = {load_model(p).source for p in DUMPS}
+    assert sources == {"xgboost-json", "lightgbm-text", "sklearn-dict"}
+    assert len(DUMPS) >= 6
+
+
+# -- golden fixtures: bit-exact through the whole stack ------------------------
+
+
+@pytest.mark.parametrize("dump", DUMPS, ids=lambda p: p.name)
+def test_golden_lowering_bit_exact(dump):
+    """Float reference == binned lowering == recorded golden, bitwise."""
+    exp = _expected(dump)
+    imported = load_model(dump)
+    ens, quant, report = lower_to_ensemble(imported)
+    assert report.exact and report.remapped_splits == 0
+    xb = quant.transform(exp["x"])
+    margin = ens.raw_margin(xb)
+    np.testing.assert_array_equal(margin, exp["raw_margin"])
+    np.testing.assert_array_equal(margin, imported.raw_margin(exp["x"]))
+    pred = ens.predict(xb)
+    np.testing.assert_array_equal(
+        np.asarray(pred, dtype=exp["predict"].dtype), exp["predict"]
+    )
+
+
+@pytest.mark.parametrize("mode", CELL_MODES)
+@pytest.mark.parametrize("dump", DUMPS, ids=lambda p: p.name)
+def test_golden_engine_all_cell_modes(dump, mode):
+    """Engine predictions bit-identical to the record in every aCAM cell
+    mode; margins within the engine's ~1 ULP accumulation contract."""
+    exp = _expected(dump)
+    cm = build(str(dump))
+    xb = cm.bin(exp["x"])
+    eng = cm.engine(mode=mode)
+    got_pred = np.asarray(eng.predict(xb))
+    if cm.table.task == "regression":
+        # regression "predictions" ARE the margins: engine tolerance
+        np.testing.assert_allclose(got_pred, exp["predict"],
+                                   rtol=1e-5, atol=1e-6)
+    else:
+        np.testing.assert_array_equal(
+            np.asarray(got_pred, dtype=exp["predict"].dtype), exp["predict"]
+        )
+    np.testing.assert_allclose(
+        np.asarray(eng.raw_margin(xb)), exp["raw_margin"],
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("dump", DUMPS[::3], ids=lambda p: p.name)
+def test_golden_save_load_serve_cold_start(dump, tmp_path):
+    """dump -> build -> save -> load -> TableRegistry, no recompilation."""
+    exp = _expected(dump)
+    cm = build(str(dump))
+    cm.save(tmp_path / "art")
+    loaded = CompiledModel.load(tmp_path / "art")
+    assert loaded.ingest == cm.ingest
+    assert loaded.ingest["exact"] is True
+    assert [e.tolist() for e in loaded.quantizer.edges] == \
+        [e.tolist() for e in cm.quantizer.edges]
+    reg = TableRegistry()
+    entry = reg.register("m", loaded)
+    xb = loaded.bin(exp["x"])
+    got = np.asarray(entry.engine.predict(xb))
+    np.testing.assert_array_equal(
+        np.asarray(got, dtype=exp["predict"].dtype), exp["predict"]
+    )
+
+
+def test_sidecar_carries_grid_occupancy(tmp_path):
+    cm = build(str(DUMPS[0]))
+    cm.save(tmp_path / "a")
+    sidecar = json.loads((tmp_path / "a.json").read_text())
+    rep = sidecar["ingest"]
+    assert rep["n_bins"] == 256
+    assert len(rep["grid"]) == rep["n_features"]
+    assert all(g["capacity"] == 255 for g in rep["grid"])
+    assert sidecar["quantizer"]["n_bins"] == 256
+
+
+# -- importer semantics --------------------------------------------------------
+
+
+def test_xgboost_dart_weights_scale_leaves():
+    doc = json.loads((FIXTURES / "xgb_dart_reg.json").read_text())
+    weighted = import_xgboost_json(doc)
+    doc["learner"]["gradient_booster"]["weight_drop"] = [1.0] * 4
+    unweighted = import_xgboost_json(doc)
+    x = _expected(FIXTURES / "xgb_dart_reg.json")["x"]
+    assert weighted.source_kind == "dart"
+    assert not np.array_equal(weighted.raw_margin(x), unweighted.raw_margin(x))
+
+
+def test_xgboost_logistic_base_score_is_logit():
+    doc = json.loads((FIXTURES / "xgb_binary.json").read_text())
+    imported = import_xgboost_json(doc)
+    assert imported.base_score[0] == pytest.approx(np.log(0.25 / 0.75))
+
+
+def test_lightgbm_categorical_expansion_matches_membership():
+    """The fixture's bitset {0,1,3,6,7} must route exactly."""
+    imported = import_lightgbm_text(str(FIXTURES / "lgbm_binary.txt"))
+    ens, quant, report = lower_to_ensemble(imported)
+    member, nonmember = 0.45, -0.52  # tree 1 leaf values
+    for cat, is_member in [(0, True), (1, True), (2, False), (3, True),
+                           (4, False), (5, False), (6, True), (7, True),
+                           (12, False)]:
+        x = np.array([[10.0, 10.0, float(cat)]])  # tree 0 -> fixed leaf
+        contrib = imported.raw_margin(x)[0, 0] - (-0.27)
+        assert contrib == pytest.approx(member if is_member else nonmember), cat
+
+
+def test_sklearn_rf_margins_are_mean_proba():
+    doc = json.loads((FIXTURES / "sk_rf_cls.json").read_text())
+    imported = import_sklearn_dict(doc)
+    x = _expected(FIXTURES / "sk_rf_cls.json")["x"]
+    m = imported.raw_margin(x)
+    np.testing.assert_allclose(m.sum(axis=1), 1.0, rtol=1e-5)  # mean proba
+
+
+def test_per_class_base_scores_become_bias_rows():
+    doc = json.loads((FIXTURES / "sk_gbdt_reg.json").read_text())
+    doc["task"] = "multiclass"
+    doc["n_classes"] = 2
+    doc["init"] = [0.75, -1.5]
+    doc["trees"] = [dict(t, **{"class": i % 2})
+                    for i, t in enumerate(doc["trees"][:4])]
+    ens, quant, report = lower_to_ensemble(import_sklearn_dict(doc))
+    assert report.bias_rows == 2
+    table = compile_ensemble(ens)
+    # bias rows are all-wildcard: they match every query
+    assert table.n_rows == ens.total_leaves
+    xb = quant.transform(np.zeros((1, 5)))
+    m = ens.raw_margin(xb)
+    imported = import_sklearn_dict(doc)
+    np.testing.assert_array_equal(m, imported.raw_margin(np.zeros((1, 5))))
+
+
+# -- threshold-grid mapping ----------------------------------------------------
+
+
+def test_from_thresholds_exact_occupancy():
+    q, merged = FeatureQuantizer.from_thresholds(
+        [np.array([0.5, 1.5, 2.5]), np.array([])], n_bins=256
+    )
+    assert merged == [0, 0]
+    assert q.effective_bins(0) == 4
+    assert q.bin_of_threshold(0, 1.5) == (2, True)
+    # binned split semantics: bin < 2  <=>  x < 1.5
+    xb = q.transform(np.array([[1.4999, 0.0], [1.5, 0.0]]))
+    assert xb[0, 0] < 2 <= xb[1, 0]
+
+
+def test_from_thresholds_overflow_merge_and_raise():
+    dense = [np.arange(40, dtype=np.float64)]
+    with pytest.raises(ValueError, match="exceed"):
+        FeatureQuantizer.from_thresholds(dense, n_bins=16, on_overflow="raise")
+    q, merged = FeatureQuantizer.from_thresholds(dense, n_bins=16)
+    assert merged == [40 - 15]
+    assert q.edges[0].shape[0] == 15
+    dropped = sorted(set(np.arange(40.0)) - set(q.edges[0]))[0]
+    t, exact = q.bin_of_threshold(0, float(dropped))
+    assert not exact and 1 <= t <= 15
+
+
+def test_overflow_lowering_reports_inexact():
+    rng = np.random.default_rng(0)
+    xb = rng.integers(0, 64, size=(400, 3)).astype(np.uint8)
+    y = rng.normal(size=400)
+    ens = train_gbdt(xb, y, task="regression", n_bins=64,
+                     params=GBDTParams(n_rounds=6, max_leaves=32))
+    imported = import_xgboost_json(to_xgboost_json(ens))
+    with pytest.raises(IngestError, match="exceed"):
+        lower_to_ensemble(imported, n_bins=8, on_overflow="raise")
+    low, q, report = lower_to_ensemble(imported, n_bins=8)
+    assert not report.exact and report.remapped_splits > 0
+    assert report.merged_thresholds == sum(g["merged"] for g in report.grid)
+    # still structurally valid and servable
+    validate_ensemble(low)
+    assert compile_ensemble(low).n_rows == low.total_leaves
+
+
+# -- malformed dumps -----------------------------------------------------------
+
+
+def test_malformed_xgboost_paths():
+    with pytest.raises(IngestError, match="learner"):
+        import_xgboost_json({"not": "a model"})
+    with pytest.raises(IngestError, match="valid JSON"):
+        import_xgboost_json("{broken")
+    doc = json.loads((FIXTURES / "xgb_binary.json").read_text())
+    doc["learner"]["objective"]["name"] = "rank:pairwise"
+    with pytest.raises(IngestError, match="rank:pairwise"):
+        import_xgboost_json(doc)
+    doc = json.loads((FIXTURES / "xgb_binary.json").read_text())
+    trees = doc["learner"]["gradient_booster"]["model"]["trees"]
+    trees[0]["split_type"] = [1] * len(trees[0]["split_type"])
+    with pytest.raises(IngestError, match="categorical"):
+        import_xgboost_json(doc)
+    doc = json.loads((FIXTURES / "xgb_binary.json").read_text())
+    doc["learner"]["gradient_booster"]["model"]["trees"][0]["left_children"] = [999]
+    with pytest.raises(IngestError):
+        import_xgboost_json(doc)
+
+
+def test_malformed_lightgbm_paths():
+    good = (FIXTURES / "lgbm_binary.txt").read_text()
+    with pytest.raises(IngestError, match="magic"):
+        import_lightgbm_text("not a model\n")
+    with pytest.raises(IngestError, match="truncated"):
+        import_lightgbm_text(good.split("end of trees")[0])
+    with pytest.raises(IngestError, match="objective"):
+        import_lightgbm_text(good.replace("objective=binary sigmoid:1",
+                                          "objective=lambdarank"))
+    with pytest.raises(IngestError, match="length"):
+        import_lightgbm_text(good.replace("split_feature=0 1",
+                                          "split_feature=0"))
+
+
+def test_malformed_sklearn_paths():
+    good = json.loads((FIXTURES / "sk_rf_cls.json").read_text())
+    with pytest.raises(IngestError, match="format"):
+        import_sklearn_dict({"format": "pickle"})
+    bad = dict(good, kind="extra-trees")
+    with pytest.raises(IngestError, match="kind"):
+        import_sklearn_dict(bad)
+    bad = json.loads(json.dumps(good))
+    bad["trees"][0].pop("children_left")
+    with pytest.raises(IngestError, match="children_left"):
+        import_sklearn_dict(bad)
+    bad = json.loads(json.dumps(good))
+    bad["trees"][0]["value"] = [[1.0]] * len(bad["trees"][0]["feature"])
+    with pytest.raises(IngestError, match="class counts"):
+        import_sklearn_dict(bad)
+
+
+def test_detect_format_and_load_model(tmp_path):
+    assert detect_format(FIXTURES / "xgb_binary.json") == "xgboost-json"
+    assert detect_format(FIXTURES / "lgbm_binary.txt") == "lightgbm-text"
+    assert detect_format(FIXTURES / "sk_rf_cls.json") == "sklearn-dict"
+    # content decides, not the extension: a JSON booster saved as .txt
+    mislabeled = tmp_path / "model.txt"
+    mislabeled.write_text((FIXTURES / "xgb_binary.json").read_text())
+    assert detect_format(mislabeled) == "xgboost-json"
+    assert load_model(mislabeled).source == "xgboost-json"
+    stray = tmp_path / "model.json"
+    stray.write_text('{"weights": [1, 2]}')
+    with pytest.raises(IngestError, match="neither"):
+        load_model(stray)
+    with pytest.raises(IngestError, match="not found"):
+        load_model(tmp_path / "nope.json")
+    with pytest.raises(IngestError, match="unknown format"):
+        load_model(stray, format="onnx")
+
+
+def test_build_rejects_junk_still():
+    with pytest.raises(TypeError, match="build"):
+        build(np.zeros(3))
+
+
+# -- round trip: native GBDT -> XGBoost JSON -> re-ingest ----------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_rounds=st.integers(min_value=1, max_value=4),
+    max_leaves=st.integers(min_value=2, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_roundtrip_native_to_xgboost_json(n_rounds, max_leaves, seed):
+    """train native -> export to the XGBoost schema -> re-ingest ->
+    bit-equal margins and predictions on binned inputs."""
+    rng = np.random.default_rng(seed)
+    n, F, B = 200, 4, 32
+    x = rng.normal(size=(n, F))
+    y = (x[:, 0] + 0.5 * x[:, 1] > 0).astype(np.int64)
+    q = FeatureQuantizer.fit(x, B)
+    xb = q.transform(x)
+    ens = train_gbdt(xb, y, task="binary", n_bins=B,
+                     params=GBDTParams(n_rounds=n_rounds,
+                                       max_leaves=max_leaves, seed=seed))
+    imported = import_xgboost_json(to_xgboost_json(ens, q))
+    low, q2, report = lower_to_ensemble(imported, n_bins=B)
+    assert report.exact
+    np.testing.assert_array_equal(
+        low.raw_margin(q2.transform(x)), ens.raw_margin(xb)
+    )
+    np.testing.assert_array_equal(
+        low.predict(q2.transform(x)), ens.predict(xb)
+    )
