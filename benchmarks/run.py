@@ -18,8 +18,11 @@ Usage:
 Regression gate: ``--baseline`` compares each record's ``us_per_call``
 against the committed baseline (matched on ``module/name``); any entry
 slower than ``baseline * (1 + tolerance/100)`` fails the run (exit 3)
-with a per-entry diff.  The gate runs after a live benchmark run or —
-the CI ``bench-smoke`` path — against an existing record via ``--check``.
+with a per-entry diff.  A baseline record may pin its own
+``tolerance_pct``, overriding the global ``--tolerance`` for that entry
+(tight kernel microbenches vs noisy end-to-end rows).  The gate runs
+after a live benchmark run or — the CI ``bench-smoke`` path — against
+an existing record via ``--check``.
 
 Exit status is nonzero when any module fails (failures are also recorded
 in the JSON payload, so CI keeps the partial record as an artifact).
@@ -77,6 +80,13 @@ def validate_payload(payload: dict) -> None:
             raise ValueError(f"record {i}: us_per_call must be a number")
         if rec["config"] is not None and not isinstance(rec["config"], dict):
             raise ValueError(f"record {i}: config must be a dict or null")
+        tol = rec.get("tolerance_pct")  # baseline-only per-entry override
+        if tol is not None and (
+            not isinstance(tol, (int, float)) or tol <= 0
+        ):
+            raise ValueError(
+                f"record {i}: tolerance_pct must be a positive number"
+            )
     for i, f in enumerate(payload["failures"]):
         if "module" not in f or "error" not in f:
             raise ValueError(f"failure {i} missing module/error: {f}")
@@ -105,19 +115,27 @@ def compare_to_baseline(
 ) -> tuple[list[dict], list[str]]:
     """Per-entry us_per_call comparison against a baseline payload.
 
-    Entries are matched on ``(module, name)``.  Returns ``(regressions,
-    lines)`` where each regression dict carries the entry, both timings
-    and the ratio, and ``lines`` is the human diff (regressions, wins,
-    and coverage changes) ready to print.
+    Entries are matched on ``(module, name)``.  A baseline record may
+    carry its own ``tolerance_pct`` — a hand-annotated per-entry
+    override of the global flag, so tight low-variance microbenches
+    (kernel rows) gate harder than noisy end-to-end ones.  Returns
+    ``(regressions, lines)`` where each regression dict carries the
+    entry, both timings and the ratio, and ``lines`` is the human diff
+    (regressions, wins, and coverage changes) ready to print.
     """
-    base = {(r["module"], r["name"]): float(r["us_per_call"])
-            for r in baseline["records"]}
+    base = {
+        (r["module"], r["name"]): (
+            float(r["us_per_call"]), r.get("tolerance_pct")
+        )
+        for r in baseline["records"]
+    }
     cur = {(r["module"], r["name"]): float(r["us_per_call"]) for r in records}
-    allowed = 1.0 + tolerance_pct / 100.0
     regressions: list[dict] = []
     lines: list[str] = []
     for key in sorted(base.keys() & cur.keys()):
-        b, c = base[key], cur[key]
+        (b, tol), c = base[key], cur[key]
+        tol = tolerance_pct if tol is None else float(tol)
+        allowed = 1.0 + tol / 100.0
         # analytic rows record 0.0us: equal-zero is fine, becoming
         # nonzero is a regression by definition
         ratio = (c / b) if b > 0 else (float("inf") if c > 0 else 1.0)
@@ -127,12 +145,13 @@ def compare_to_baseline(
             regressions.append({
                 "module": key[0], "name": key[1],
                 "baseline_us": b, "current_us": c, "ratio": ratio,
+                "tolerance_pct": tol,
             })
         elif ratio < 1 / allowed:
             tag = "faster"
         lines.append(
             f"  {tag:>10}  {key[0]}/{key[1]}: {c:.1f}us vs baseline "
-            f"{b:.1f}us ({ratio:.2f}x)"
+            f"{b:.1f}us ({ratio:.2f}x, tol +{tol:.0f}%)"
         )
     for key in sorted(cur.keys() - base.keys()):
         lines.append(f"  {'new':>10}  {key[0]}/{key[1]}: {cur[key]:.1f}us "
@@ -150,12 +169,13 @@ def run_gate(records: list[dict], baseline_path: str | Path,
     baseline = check_file(baseline_path)
     regressions, lines = compare_to_baseline(records, baseline, tolerance_pct)
     print(f"# baseline {baseline_path} (git {baseline['git_rev']}), "
-          f"tolerance {tolerance_pct:.0f}%", file=sys.stderr)
+          f"default tolerance {tolerance_pct:.0f}% "
+          "(per-entry tolerance_pct overrides apply)", file=sys.stderr)
     for ln in lines:
         print(ln, file=sys.stderr)
     if regressions:
         print(f"# PERF REGRESSION: {len(regressions)} entries beyond "
-              f"+{tolerance_pct:.0f}%", file=sys.stderr)
+              "their tolerance", file=sys.stderr)
         return False
     print("# baseline gate: OK", file=sys.stderr)
     return True
@@ -194,7 +214,8 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument(
         "--tolerance", type=float, default=25.0, metavar="PCT",
         help="allowed per-entry us_per_call slowdown over the baseline "
-             "in percent (default: %(default)s)",
+             "in percent; baseline entries with their own tolerance_pct "
+             "override it (default: %(default)s)",
     )
     args = ap.parse_args(argv)
 

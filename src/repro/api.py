@@ -48,14 +48,19 @@ from repro.core.trees import Ensemble
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.engine import XTimeEngine
 
-SCHEMA_VERSION = 1
+# v2: packed-at-rest low/high arrays (narrow dtype, INCLUSIVE upper
+# bounds) + the table_dtype key — a v1 reader would misread packed arrays
+# as canonical int32 exclusive-high, so packed artifacts must fail its
+# version gate cleanly.  v1 artifacts (int32, no table_dtype) still load.
+SCHEMA_VERSION = 2
+_SUPPORTED_SCHEMAS = (1, 2)
 _FORMAT = "xtime-compiled-model"
 
 # the CAMTable arrays stored in the .npz payload
 _TABLE_ARRAYS = ("low", "high", "leaf", "tree_id", "class_id")
 _TABLE_META = (
     "n_trees", "n_features", "n_bins", "n_outputs",
-    "task", "kind", "base_score", "n_classes",
+    "task", "kind", "base_score", "n_classes", "table_dtype",
 )
 
 
@@ -81,6 +86,10 @@ class CompiledModel:
     # — and the lowering's validation report (sidecar provenance)
     quantizer: "FeatureQuantizer | None" = None
     ingest: dict | None = None
+    # kernel-autotune provenance: the serialized ``repro.core.tune.TunePlan``
+    # whose winner is already folded into ``deploy`` (see ``with_tuning``);
+    # persisted in the sidecar so cold starts skip the re-search
+    tuning: dict | None = None
 
     def __post_init__(self) -> None:
         # per-instance engine cache (frozen dataclass => set via object)
@@ -152,6 +161,25 @@ class CompiledModel:
         perf = xtime_perf(self.table, self.placement, noc)
         return dataclasses.replace(self, noc=noc, perf=perf, deploy=deploy)
 
+    def with_tuning(self, plan) -> "CompiledModel":
+        """Fold an ``autotune_kernel`` winner into the artifact.
+
+        The plan's knobs (b_blk/r_blk/table_dtype/mode/backend) replace
+        the deploy config's, and the full plan rides the sidecar so
+        reloaded artifacts — and ``TableRegistry`` cold starts — bind
+        engines in the tuned configuration without re-searching.
+        """
+        tuned = self.with_deploy(plan.apply(self.deploy))
+        return dataclasses.replace(tuned, tuning=plan.to_dict())
+
+    def tune_plan(self):
+        """The persisted ``TunePlan`` (None when never autotuned)."""
+        if self.tuning is None:
+            return None
+        from repro.core.tune import TunePlan  # lazy: keeps load light
+
+        return TunePlan.from_dict(self.tuning)
+
     # -- persistence ---------------------------------------------------------
 
     def save(self, path: str | Path) -> Path:
@@ -164,6 +192,24 @@ class CompiledModel:
         base.parent.mkdir(parents=True, exist_ok=True)
         t = self.table
         arrays = {name: getattr(t, name) for name in _TABLE_ARRAYS}
+        if t.table_dtype != "int32":
+            # at-rest compaction mirrors the kernel layout: packed dtype,
+            # INCLUSIVE upper bound (real rows always have high >= low+1,
+            # so high-1 is representable; anything else — e.g. a table
+            # whose arrays were mutated without resetting table_dtype —
+            # must fail here, not wrap into a silently corrupt artifact)
+            dt = np.dtype(t.table_dtype)
+            top = np.iinfo(dt).max
+            if t.high.size and (
+                int(t.high.min()) < 1 or int(t.high.max()) - 1 > top
+                or int(t.low.min()) < 0 or int(t.low.max()) > top
+            ):
+                raise ValueError(
+                    f"table bounds do not fit table_dtype {t.table_dtype!r} "
+                    "as inclusive ranges; rebuild with table_dtype='int32'"
+                )
+            arrays["low"] = t.low.astype(dt)
+            arrays["high"] = (t.high - 1).astype(dt)
         if self.quantizer is not None:
             # ragged per-feature edges stored flat + offsets
             edges = self.quantizer.edges
@@ -192,6 +238,8 @@ class CompiledModel:
             sidecar["quantizer"] = {"n_bins": self.quantizer.n_bins}
         if self.ingest is not None:
             sidecar["ingest"] = self.ingest
+        if self.tuning is not None:
+            sidecar["tuning"] = self.tuning
         out = _sibling(base, ".json")
         out.write_text(json.dumps(sidecar, indent=1))
         return out
@@ -208,13 +256,19 @@ class CompiledModel:
                 f"(format={sidecar.get('format')!r})"
             )
         version = sidecar.get("schema_version")
-        if version != SCHEMA_VERSION:
+        if version not in _SUPPORTED_SCHEMAS:
             raise ValueError(
-                f"{base}: artifact schema_version={version!r} is not the "
-                f"supported version {SCHEMA_VERSION}; re-run repro.api.build"
+                f"{base}: artifact schema_version={version!r} is not in "
+                f"the supported versions {_SUPPORTED_SCHEMAS}; re-run "
+                "repro.api.build"
             )
         with np.load(_sibling(base, ".npz")) as npz:
             arrays = {name: npz[name] for name in _TABLE_ARRAYS}
+            if sidecar["table"].get("table_dtype", "int32") != "int32":
+                # packed-at-rest arrays: inclusive high in a narrow dtype;
+                # restore the canonical int32 exclusive-high form
+                arrays["low"] = arrays["low"].astype(np.int32)
+                arrays["high"] = arrays["high"].astype(np.int32) + 1
             quantizer = None
             if "quantizer" in sidecar and "q_offsets" in npz:
                 flat, off = npz["q_edges"], npz["q_offsets"]
@@ -235,6 +289,7 @@ class CompiledModel:
             table=table, placement=placement, noc=noc, perf=perf,
             deploy=deploy, quantizer=quantizer,
             ingest=sidecar.get("ingest"),
+            tuning=sidecar.get("tuning"),
         )
 
     # -- ingested-model serving ----------------------------------------------
@@ -270,6 +325,8 @@ class CompiledModel:
             "throughput_msps": round(self.perf.throughput_msps, 2),
             "backend": self.deploy.backend,
             "mode": self.deploy.mode,
+            "table_dtype": self.table.table_dtype,
+            "tuned": self.tuning is not None,
         }
 
 

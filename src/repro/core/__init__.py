@@ -34,6 +34,10 @@ _LAZY = {
     "EngineArrays": "repro.core.engine",
     "CompiledModel": "repro.api",
     "build": "repro.api",
+    # kernel autotuner (tune.py imports the engine lazily itself, but its
+    # module also pulls the training stack — keep it off the import path)
+    "TunePlan": "repro.core.tune",
+    "autotune_kernel": "repro.core.tune",
 }
 
 

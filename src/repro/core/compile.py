@@ -15,16 +15,41 @@ distributed engine.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from repro.core.trees import Ensemble
 
+# Kernel table dtypes, narrowest first.  The packed (unsigned) dtypes store
+# INCLUSIVE upper bounds so the full bin range [0, n_bins) fits the dtype
+# (n_bins=256 needs values up to 255, not 256) — see DESIGN.md §10.
+TABLE_DTYPES = ("uint8", "uint16", "int32")
+
+
+def select_table_dtype(n_bins: int) -> str:
+    """Narrowest kernel dtype the grid cardinality permits (§III-B: the
+    paper's native precision is 8-bit; uint8 covers its whole design
+    space).  Packed dtypes hold inclusive bounds, so ``n_bins - 1`` is
+    the largest stored value."""
+    if n_bins <= 1 << 8:
+        return "uint8"
+    if n_bins <= 1 << 16:
+        return "uint16"
+    return "int32"
+
 
 @dataclass
 class CAMTable:
-    """The compiled ensemble: one row per leaf (root-to-leaf path)."""
+    """The compiled ensemble: one row per leaf (root-to-leaf path).
+
+    ``low``/``high`` are always held here in canonical int32
+    exclusive-high form — the semantic layer every compiler/analysis
+    consumer reads.  ``table_dtype`` records the packed dtype the KERNEL
+    path may stream instead (selected at compile time from ``n_bins``);
+    the engine performs the actual packing (inclusive-high, narrow
+    dtype) at bind time and the artifact stores the packed form at rest.
+    """
 
     low: np.ndarray  # (R, F) int32, inclusive lower bin bound
     high: np.ndarray  # (R, F) int32, exclusive upper bin bound
@@ -39,6 +64,7 @@ class CAMTable:
     kind: str
     base_score: float
     n_classes: int
+    table_dtype: str = "int32"  # packed kernel dtype (schema v1-additive)
 
     @property
     def n_rows(self) -> int:
@@ -55,6 +81,48 @@ class CAMTable:
         (``scripts/ingest.py`` prints the mean for ingested tables)."""
         dc = (self.low == 0) & (self.high == self.n_bins)
         return 1.0 - dc.mean(axis=0)
+
+    def row_tile_activity(self, f_blk: int) -> np.ndarray:
+        """(R, ceil(F/f_blk)) bool — which feature tiles each row actually
+        constrains (non-wildcard).  The shared primitive behind
+        ``tile_activity`` and the wildcard row ordering;
+        ``kops.wildcard_tile_mask`` is the padded/packed kernel-side twin.
+        """
+        act = ~((self.low == 0) & (self.high == self.n_bins))
+        R, F = act.shape
+        nf = max(1, -(-F // f_blk))
+        padded = np.zeros((R, nf * f_blk), dtype=bool)
+        padded[:, :F] = act
+        return padded.reshape(R, nf, f_blk).any(axis=-1)
+
+    def tile_activity(self, r_blk: int, f_blk: int) -> np.ndarray:
+        """(ceil(R/r_blk), ceil(F/f_blk)) bool — does any cell of the tile
+        hold a real (non-wildcard) range?  An all-wildcard tile matches
+        every query, so the v2 kernel skips its compare entirely."""
+        rows = self.row_tile_activity(f_blk)
+        R, nf = rows.shape
+        nr = max(1, -(-R // r_blk))
+        padded = np.zeros((nr * r_blk, nf), dtype=bool)
+        padded[:R] = rows
+        return padded.reshape(nr, r_blk, nf).any(axis=1)
+
+    def tile_skip_fraction(self, r_blk: int, f_blk: int) -> float:
+        """Fraction of (r_blk, f_blk) compare tiles the v2 kernel skips —
+        what wildcard-aware row ordering maximizes."""
+        act = self.tile_activity(r_blk, f_blk)
+        return float(1.0 - act.mean()) if act.size else 0.0
+
+    def permuted(self, perm: np.ndarray) -> "CAMTable":
+        """The same table with rows reordered by ``perm`` — semantically
+        identical (the match+accumulate is row-order invariant)."""
+        return replace(
+            self,
+            low=self.low[perm],
+            high=self.high[perm],
+            leaf=self.leaf[perm],
+            tree_id=self.tree_id[perm],
+            class_id=self.class_id[perm],
+        )
 
     def leaf_matrix(self) -> np.ndarray:
         """(R, n_outputs) leaf values scattered to their class channel.
@@ -90,8 +158,51 @@ def validate_ensemble(ens: Ensemble) -> None:
         raise ValueError("leaf_class_mode='leaf' needs leaf_class per tree")
 
 
-def compile_ensemble(ens: Ensemble) -> CAMTable:
-    """Traverse every tree, emit one CAM row per leaf."""
+def order_rows_by_wildcards(table: CAMTable, f_blk: int = 128) -> CAMTable:
+    """Cluster rows by which feature tiles they actually constrain.
+
+    Tree rows are overwhelmingly wildcards (MonoSparse-CAM,
+    arXiv:2407.11071): a depth-d path constrains ≤ d of F features.
+    Sorting rows by their per-feature-tile activity bitmask groups rows
+    that are all-wildcard in the same ``f_blk``-wide tile into the same
+    row blocks, turning those (r_blk, f_blk) tiles into skippable
+    no-ops for the v2 kernel.  Stable sort: rows with identical
+    activity keep their tree-traversal order.
+    """
+    tile_act = table.row_tile_activity(f_blk)  # (R, T)
+    n_tiles = tile_act.shape[1]
+    # pack each row's tile bitmask into one integer sort key (T <= 63 for
+    # any realistic F; fall back to lexsort above that)
+    if n_tiles < 63:
+        key = (tile_act << np.arange(n_tiles - 1, -1, -1)).sum(axis=1)
+        perm = np.argsort(key, kind="stable")
+    else:  # pragma: no cover - >8k features
+        perm = np.lexsort(tile_act.T[::-1])
+    return table.permuted(perm)
+
+
+def compile_ensemble(
+    ens: Ensemble,
+    *,
+    table_dtype: str = "auto",
+    order_rows: bool = True,
+) -> CAMTable:
+    """Traverse every tree, emit one CAM row per leaf.
+
+    ``table_dtype='auto'`` selects the narrowest kernel dtype the bin
+    grid permits (``select_table_dtype``); pass ``'int32'`` to pin the
+    v1 wide layout.  ``order_rows`` applies the wildcard-aware row
+    clustering (row order never affects results — see ``permuted``).
+    """
+    if table_dtype == "auto":
+        table_dtype = select_table_dtype(ens.n_bins)
+    if table_dtype not in TABLE_DTYPES:
+        raise ValueError(f"table_dtype {table_dtype!r} not in {TABLE_DTYPES}")
+    if table_dtype != "int32" and ens.n_bins - 1 > np.iinfo(table_dtype).max:
+        raise ValueError(
+            f"table_dtype {table_dtype!r} cannot hold n_bins={ens.n_bins} "
+            "(inclusive bounds store values up to n_bins-1)"
+        )
     validate_ensemble(ens)
     F, B = ens.n_features, ens.n_bins
     lows: list[np.ndarray] = []
@@ -125,7 +236,7 @@ def compile_ensemble(ens: Ensemble) -> CAMTable:
             stack.append((int(tree.right[node]), rlo, rhi))
             stack.append((int(tree.left[node]), llo, lhi))
 
-    return CAMTable(
+    table = CAMTable(
         low=np.stack(lows).astype(np.int32),
         high=np.stack(highs).astype(np.int32),
         leaf=np.asarray(leaves, dtype=np.float32),
@@ -139,7 +250,9 @@ def compile_ensemble(ens: Ensemble) -> CAMTable:
         kind=ens.kind,
         base_score=ens.base_score,
         n_classes=ens.n_classes,
+        table_dtype=table_dtype,
     )
+    return order_rows_by_wildcards(table) if order_rows else table
 
 
 # ---------------------------------------------------------------------------

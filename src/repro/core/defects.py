@@ -44,7 +44,16 @@ def inject_table_defects(
     side) independently eligible for a 1-level flip."""
     low = _flip_levels(table.low, frac, table.n_bins, rng)
     high = _flip_levels(table.high, frac, table.n_bins, rng)
-    return dc_replace(table, low=low.astype(np.int32), high=high.astype(np.int32))
+    # flipped levels can leave the packed encoding's range (e.g. low
+    # pushed to n_bins, high below low): the perturbed table drops to the
+    # universal int32 layout — the defect study measures accuracy, and
+    # the engine resolves 'auto' dtype from this field
+    return dc_replace(
+        table,
+        low=low.astype(np.int32),
+        high=high.astype(np.int32),
+        table_dtype="int32",
+    )
 
 
 def inject_query_defects(

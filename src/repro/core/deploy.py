@@ -24,6 +24,8 @@ BACKENDS = ("jnp", "pallas")
 MODES = ("direct", "inclusive", "msb_lsb", "two_cycle")
 NOC_CONFIGS = ("auto", "accumulate", "batch", "hybrid")
 SPMD_MODES = ("auto", "gspmd", "shard_map")
+TABLE_DTYPES = ("auto", "uint8", "uint16", "int32")
+FAITHFUL_MODES = ("msb_lsb", "two_cycle")  # bit-faithful aCAM arithmetic
 
 
 @dataclass(frozen=True)
@@ -48,8 +50,17 @@ class DeployConfig:
         batch sharding (plus a leading 'pod' axis when present).
       b_blk / r_blk: kernel batch/row tile sizes — also the padding
         granularity of queries and CAM rows.
+      f_blk: feature tile width of the v2 kernel's third grid dimension
+        (lane multiple; features pad to it, DESIGN.md §10).
+      table_dtype: kernel table dtype.  'auto' takes the compile-time
+        selection carried on the ``CAMTable`` (uint8 for ≤256 bins,
+        uint16 to 65536, int32 beyond); an explicit packed dtype
+        overrides it; the faithful modes ('msb_lsb'/'two_cycle') always
+        run the int32 exclusive-high layout.
       c_mult: leaf-channel padding multiple (kernel lane packing).
-      interpret: run the Pallas kernel in interpret mode (CPU).
+      interpret: run the Pallas kernel in interpret mode.  'auto'
+        (default) resolves at engine-bind time: compiled on TPU,
+        interpreted elsewhere — callers no longer hard-code it.
       batching: chip-side input batching (§III-D Fig. 7c) — replicate a
         small model across core groups; feeds ``plan_noc`` at build time.
     """
@@ -62,8 +73,10 @@ class DeployConfig:
     batch_axis: str = "data"
     b_blk: int = 128
     r_blk: int = 256
+    f_blk: int = 128
+    table_dtype: str = "auto"
     c_mult: int = 8
-    interpret: bool = True
+    interpret: bool | str = "auto"
     batching: bool = False
 
     def __post_init__(self) -> None:
@@ -77,8 +90,22 @@ class DeployConfig:
             )
         if self.spmd not in SPMD_MODES:
             raise ValueError(f"spmd {self.spmd!r} not in {SPMD_MODES}")
+        if self.table_dtype not in TABLE_DTYPES:
+            raise ValueError(
+                f"table_dtype {self.table_dtype!r} not in {TABLE_DTYPES}"
+            )
+        if self.mode in FAITHFUL_MODES and self.table_dtype not in ("auto", "int32"):
+            raise ValueError(
+                f"mode {self.mode!r} is bit-faithful to the int32 "
+                f"exclusive-high layout; table_dtype={self.table_dtype!r} "
+                "is only available for 'direct'/'inclusive'"
+            )
         if self.b_blk < 1 or self.r_blk < 1 or self.c_mult < 1:
             raise ValueError("b_blk, r_blk and c_mult must be >= 1")
+        if self.f_blk < 1:
+            raise ValueError("f_blk must be >= 1")
+        if self.interpret not in (True, False, "auto"):
+            raise ValueError("interpret must be True, False or 'auto'")
 
     # -- derivation ----------------------------------------------------------
 

@@ -5,6 +5,15 @@ under a plain ``jax.jit``.  Execution knobs arrive as a ``DeployConfig``
 (``XTimeEngine.from_config`` / ``CompiledModel.engine``); the loose-kwarg
 constructor form is deprecated.
 
+Kernel v2 (DESIGN.md §10): at bind time the engine packs the canonical
+int32 exclusive-high table into the narrowest dtype the grid permits
+(``resolve_table_dtype`` — uint8 for ≤256 bins, inclusive upper bounds,
+compared natively), precomputes the wildcard tile-activity mask the
+kernel uses to skip all-wildcard compare tiles, and resolves
+``interpret='auto'`` against the bound platform.  All of it is
+semantics-free: every (backend, mode, table_dtype) combination computes
+identical bits (tests/test_kernel_v2.py).
+
 Scale-out path (``config.spmd``, DESIGN.md §8): on a mesh the CAM rows
 (cores) shard over ``config.row_axis`` and the query batch over
 ``config.batch_axis`` (× ``pod``), and the §III-D H-tree router program
@@ -43,11 +52,31 @@ except ImportError:  # pragma: no cover - version-dependent import path
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.core.compile import CAMTable
-from repro.core.deploy import DeployConfig
+from repro.core.deploy import FAITHFUL_MODES, DeployConfig
 from repro.kernels import ops as kops
+from repro.kernels.cam_match import default_interpret, pallas_available
 from repro.kernels.ref import cam_match_ref
 
 _UNSET = object()  # distinguishes "kwarg not passed" from an explicit default
+
+
+def resolve_table_dtype(table: CAMTable, config: DeployConfig) -> str:
+    """Effective kernel table dtype for this (table, config) binding.
+
+    The faithful cell modes emulate the paper's macro-cell arithmetic on
+    the int32 exclusive-high layout; otherwise 'auto' takes the
+    compile-time selection carried on the table, and an explicit packed
+    dtype must actually hold the grid (inclusive bounds -> n_bins-1).
+    """
+    if config.mode in FAITHFUL_MODES:
+        return "int32"  # DeployConfig rejects explicit packed + faithful
+    dt = table.table_dtype if config.table_dtype == "auto" else config.table_dtype
+    if dt != "int32" and table.n_bins - 1 > np.iinfo(dt).max:
+        raise ValueError(
+            f"table_dtype {dt!r} cannot hold n_bins={table.n_bins} "
+            "(inclusive bounds store values up to n_bins-1)"
+        )
+    return dt
 
 
 def _wrap_shard_map(fn, mesh, in_specs, out_specs):
@@ -66,12 +95,15 @@ def _wrap_shard_map(fn, mesh, in_specs, out_specs):
 
 @dataclass
 class EngineArrays:
-    low: jnp.ndarray  # (R_pad, F_pad) int32
-    high: jnp.ndarray
+    low: jnp.ndarray  # (R_pad, F_pad) table dtype
+    high: jnp.ndarray  # (inclusive upper bounds when packed)
     leaf: jnp.ndarray  # (R_pad, C_pad) float32
+    tile_mask: jnp.ndarray  # (R_pad/r_blk, F_pad/f_blk) int32
     r_pad: int
     f_pad: int
     c_pad: int
+    table_dtype: str = "int32"
+    inclusive: bool = False  # high bounds stored inclusive?
 
 
 class XTimeEngine:
@@ -142,6 +174,17 @@ class XTimeEngine:
         self.table = table
         self.config = config
         self.backend = config.backend
+        if self.backend == "pallas" and not pallas_available():
+            # jaxlib builds without the pallas TPU extension can't run the
+            # v2 kernel even interpreted; the jnp oracle computes the same
+            # bits, so degrade loudly instead of crashing at first predict
+            warnings.warn(
+                "pallas TPU support unavailable in this jaxlib; engine "
+                "falls back to the jnp oracle (identical results)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            self.backend = "jnp"
         self.mode = config.mode
         self.mesh = mesh
         self.row_axis = config.row_axis
@@ -150,7 +193,23 @@ class XTimeEngine:
         self.noc_config = "accumulate" if noc_cfg == "auto" else noc_cfg
         self.b_blk = config.b_blk
         self.r_blk = config.r_blk
-        self.interpret = config.interpret
+        self.f_blk = config.f_blk
+        # 'auto' interpret resolves against the bound platform: compiled
+        # Pallas on TPU, the interpreter everywhere else — so callers never
+        # hard-code the slow interpreter onto real hardware again
+        self.interpret = (
+            default_interpret() if config.interpret == "auto"
+            else bool(config.interpret)
+        )
+        # kernel v2 compact layout: the narrowest dtype the grid permits
+        # (DESIGN.md §10).  Packed tables store inclusive upper bounds and
+        # compare with the 'inclusive' cell, bit-equal to 'direct' on the
+        # exclusive layout; the faithful modes stay on int32.
+        self.table_dtype = resolve_table_dtype(table, config)
+        if np.dtype(self.table_dtype).kind == "u":
+            self.kernel_mode = "inclusive"
+        else:
+            self.kernel_mode = config.mode
         # 'auto' partitioning resolves at bind time: explicit shard_map
         # collectives when there is a mesh to communicate over, plain jit
         # otherwise (without a mesh both modes are the same program).
@@ -180,22 +239,26 @@ class XTimeEngine:
         row_mult = self.r_blk
         if mesh is not None and self.noc_config in ("accumulate", "hybrid"):
             row_mult = self.r_blk * mesh.shape[self.row_axis]
-        low, high, leaf = kops.pad_tables(
+        low, high, leaf, inclusive = kops.pack_tables(
             table.low, table.high, table.leaf_matrix(),
             r_blk=row_mult, c_mult=config.c_mult, n_bins=table.n_bins,
+            f_blk=self.f_blk, dtype=self.table_dtype,
+            inclusive=(True if self.kernel_mode == "inclusive" else None),
         )
-        if config.mode == "inclusive":
-            # the compact cell mode compares low <= q <= high: store
-            # inclusive upper bounds (always-match n_bins-1; never-match
-            # padding rows become high=-1 < low, still unmatchable)
-            high = high - 1
+        tile_mask = kops.wildcard_tile_mask(
+            low, high, r_blk=self.r_blk, f_blk=self.f_blk,
+            n_bins=table.n_bins, inclusive=inclusive,
+        )
         self.arrays = EngineArrays(
             low=jnp.asarray(low),
             high=jnp.asarray(high),
             leaf=jnp.asarray(leaf),
+            tile_mask=jnp.asarray(tile_mask),
             r_pad=low.shape[0],
             f_pad=low.shape[1],
             c_pad=leaf.shape[1],
+            table_dtype=self.table_dtype,
+            inclusive=inclusive,
         )
         if mesh is not None:
             self._place_on_mesh()
@@ -232,22 +295,26 @@ class XTimeEngine:
         self.arrays.low = jax.device_put(self.arrays.low, rs)
         self.arrays.high = jax.device_put(self.arrays.high, rs)
         self.arrays.leaf = jax.device_put(self.arrays.leaf, rs)
+        # the tile-activity mask shards with the rows it describes
+        self.arrays.tile_mask = jax.device_put(self.arrays.tile_mask, rs)
 
     # -- compute -----------------------------------------------------------
 
     def _kernel_fn(self) -> Callable:
-        """(q, low, high, leaf) -> (B, C_pad) raw accumulated leaf sums over
-        the rows it is handed — no epilogue, no collectives.  Under
-        shard_map the operands (and B/R) are per-shard."""
-        backend, mode = self.backend, self.mode
-        b_blk, r_blk, interpret = self.b_blk, self.r_blk, self.interpret
+        """(q, low, high, leaf, mask) -> (B, C_pad) raw accumulated leaf
+        sums over the rows it is handed — no epilogue, no collectives.
+        Under shard_map the operands (and B/R) are per-shard."""
+        backend, mode = self.backend, self.kernel_mode
+        b_blk, r_blk, f_blk = self.b_blk, self.r_blk, self.f_blk
+        interpret = self.interpret
 
-        def kernel(q, low, high, leaf):
+        def kernel(q, low, high, leaf, mask):
             if backend == "pallas":
                 return kops.cam_match(
-                    q, low, high, leaf,
+                    q, low, high, leaf, mask,
                     out_b=q.shape[0], out_c=leaf.shape[1],
-                    b_blk=b_blk, r_blk=r_blk, mode=mode, interpret=interpret,
+                    b_blk=b_blk, r_blk=r_blk, f_blk=f_blk,
+                    mode=mode, interpret=interpret,
                 )
             return cam_match_ref(q, low, high, leaf, mode=mode)
 
@@ -285,10 +352,10 @@ class XTimeEngine:
         if self.mesh is not None and self.spmd == "shard_map":
             noc, row_axis = self.noc_config, self.row_axis
 
-            def body(q, low, high, leaf):
+            def body(q, low, high, leaf, mask):
                 if noc == "hybrid":
                     q = jax.lax.all_gather(q, row_axis, axis=0, tiled=True)
-                out = kernel(q, low, high, leaf)
+                out = kernel(q, low, high, leaf, mask)
                 if noc == "accumulate":
                     out = jax.lax.psum(out, row_axis)
                 elif noc == "hybrid":
@@ -298,9 +365,13 @@ class XTimeEngine:
                 return out
 
             qs, rs = self._batch_spec(), self._row_spec()
-            mapped = _wrap_shard_map(body, self.mesh, (qs, rs, rs, rs), qs)
-            return lambda q, low, high, leaf: epilogue(mapped(q, low, high, leaf))
-        return lambda q, low, high, leaf: epilogue(kernel(q, low, high, leaf))
+            mapped = _wrap_shard_map(body, self.mesh, (qs, rs, rs, rs, rs), qs)
+            return lambda q, low, high, leaf, mask: epilogue(
+                mapped(q, low, high, leaf, mask)
+            )
+        return lambda q, low, high, leaf, mask: epilogue(
+            kernel(q, low, high, leaf, mask)
+        )
 
     def _jitted(self, key: str, donate: bool = False) -> Callable:
         cache_key = (key, donate)
@@ -310,8 +381,8 @@ class XTimeEngine:
         want_pred = key == "predict"
         table = self.table
 
-        def fn(q, low, high, leaf):
-            m = margin(q, low, high, leaf)
+        def fn(q, low, high, leaf, mask):
+            m = margin(q, low, high, leaf, mask)
             if not want_pred:
                 return m
             if table.task == "regression":
@@ -328,8 +399,8 @@ class XTimeEngine:
             bs = NamedSharding(self.mesh, self._batch_spec())
             rs = NamedSharding(self.mesh, self._row_spec())
             out_s = NamedSharding(self.mesh, self._batch_spec())
-            jfn = jax.jit(fn, in_shardings=(bs, rs, rs, rs), out_shardings=out_s,
-                          **donate_kw)
+            jfn = jax.jit(fn, in_shardings=(bs, rs, rs, rs, rs),
+                          out_shardings=out_s, **donate_kw)
         else:
             jfn = jax.jit(fn, **donate_kw)
         self._fn_cache[cache_key] = jfn
@@ -338,7 +409,10 @@ class XTimeEngine:
     def _prep_queries(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
         # pad to a batch both the kernel tiling and the mesh sharding accept
         mult = int(np.lcm(self.b_blk, self.batch_multiple))
-        q = kops.pad_queries(jnp.asarray(q_bins), self.arrays.f_pad, b_blk=mult)
+        q = kops.pad_queries(
+            jnp.asarray(q_bins), self.arrays.f_pad, b_blk=mult,
+            dtype=self.table_dtype,
+        )
         if self.mesh is not None:
             q = jax.device_put(q, NamedSharding(self.mesh, self._batch_spec()))
         return q
@@ -348,14 +422,14 @@ class XTimeEngine:
         B = q_bins.shape[0]
         q = self._prep_queries(q_bins)
         a = self.arrays
-        return self._jitted("margin")(q, a.low, a.high, a.leaf)[:B]
+        return self._jitted("margin")(q, a.low, a.high, a.leaf, a.tile_mask)[:B]
 
     def predict(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
         """Final predictions — matches ``Ensemble.predict``."""
         B = q_bins.shape[0]
         q = self._prep_queries(q_bins)
         a = self.arrays
-        return self._jitted("predict")(q, a.low, a.high, a.leaf)[:B]
+        return self._jitted("predict")(q, a.low, a.high, a.leaf, a.tile_mask)[:B]
 
     # -- bucketed serving path ----------------------------------------------
 
@@ -404,6 +478,13 @@ class XTimeEngine:
                 raise ValueError(
                     f"expected (_, {a.f_pad}) padded queries, got {q_padded.shape}"
                 )
+            if q_padded.dtype != np.dtype(self.table_dtype):
+                # packed engines compare queries in the table dtype; casting
+                # here keeps pre-v2 callers (int32 buckets) on one jit entry
+                # (wrap-checked: a narrowed out-of-range bin would match
+                # rows it must not)
+                kops.check_query_range(q_padded, self.table_dtype)
+                q_padded = q_padded.astype(np.dtype(self.table_dtype))
             if q_padded.shape[0] % self.batch_multiple:
                 raise ValueError(
                     f"bucket {q_padded.shape[0]} not a multiple of "
@@ -414,13 +495,13 @@ class XTimeEngine:
                     q_padded, NamedSharding(self.mesh, self._batch_spec())
                 )
             with warnings.catch_warnings():
-                # int32 queries can never alias the float32 outputs (and CPU
-                # lacks donation entirely); donation still releases the
+                # integer queries can never alias the float32 outputs (and
+                # CPU lacks donation entirely); donation still releases the
                 # buffer early on TPU, so keep it but drop the noise.
                 warnings.filterwarnings(
                     "ignore", message="Some donated buffers were not usable"
                 )
-                return jfn(q_padded, a.low, a.high, a.leaf)
+                return jfn(q_padded, a.low, a.high, a.leaf, a.tile_mask)
 
         return run
 
@@ -440,7 +521,9 @@ class XTimeEngine:
         margin = self._margin_fn()
         bs = NamedSharding(self.mesh, self._batch_spec())
         rs = NamedSharding(self.mesh, self._row_spec())
-        return margin, (bs, rs, rs, rs), bs
+        return margin, (bs, rs, rs, rs, rs), bs
 
     def input_specs(self, batch: int) -> jax.ShapeDtypeStruct:
-        return jax.ShapeDtypeStruct((batch, self.arrays.f_pad), jnp.int32)
+        return jax.ShapeDtypeStruct(
+            (batch, self.arrays.f_pad), np.dtype(self.table_dtype)
+        )

@@ -175,6 +175,55 @@ def xtime_perf(
 
 
 # ---------------------------------------------------------------------------
+# Kernel v2 memory-traffic model (DESIGN.md §10) — what compact dtypes and
+# wildcard tile skipping buy on the TPU/CPU adaptation, as bytes.
+# ---------------------------------------------------------------------------
+
+
+def kernel_traffic_model(
+    *,
+    batch: int,
+    rows: int,
+    features: int,
+    channels: int,
+    table_dtype: str = "int32",
+    tile_skip_fraction: float = 0.0,
+) -> dict:
+    """Bytes one cam_match call streams through VMEM, and its arithmetic
+    intensity — the roofline inputs the autotuner's candidates move.
+
+    ``table_dtype`` scales the threshold-table and query traffic (the low
+    and high tables dominate: 2·R·F cells vs B·F queries).
+    ``tile_skip_fraction`` discounts COMPARE OPS only: the v2 kernel's
+    ``@pl.when`` guard skips the VPU work of an all-wildcard tile, but
+    the BlockSpec pipeline still streams its blocks into VMEM — the
+    bytes are spent either way (index-map-level skipping is future
+    work).  Returns raw byte counts plus ``packed_ratio`` — table
+    traffic relative to the v1 int32 layout (4.0 for uint8).
+    """
+    itemsize = np.dtype(table_dtype).itemsize
+    live = 1.0 - tile_skip_fraction
+    bytes_tables = 2 * rows * features * itemsize
+    bytes_queries = batch * features * itemsize
+    bytes_leaf = rows * channels * 4
+    bytes_out = batch * channels * 4
+    total = bytes_tables + bytes_queries + bytes_leaf + bytes_out
+    compare_ops = 2.0 * batch * rows * features * live
+    mac_ops = 2.0 * batch * rows * channels
+    return {
+        "bytes_tables": bytes_tables,
+        "bytes_queries": bytes_queries,
+        "bytes_leaf": bytes_leaf,
+        "bytes_out": bytes_out,
+        "bytes_total": total,
+        "compare_ops": compare_ops,
+        "mac_ops": mac_ops,
+        "intensity_ops_per_byte": (compare_ops + mac_ops) / max(1.0, total),
+        "packed_ratio": 4.0 / itemsize,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Booster (He et al., IPDPS'22) — digital LUT ASIC comparison (§V-B)
 # ---------------------------------------------------------------------------
 

@@ -1,4 +1,5 @@
-"""Hyperparameter search under X-TIME hardware constraints (§IV-A).
+"""Hyperparameter search under X-TIME hardware constraints (§IV-A), plus
+the kernel v2 execution autotuner (DESIGN.md §10).
 
 The paper optimizes every model/dataset pair with Hyperopt (100 trials)
 subject to the chip constraints (N_trees <= 4096, N_leaves,max <= 256,
@@ -6,17 +7,30 @@ subject to the chip constraints (N_trees <= 4096, N_leaves,max <= 256,
 This module reproduces that workflow with seeded random search over the
 same space (no hyperopt offline; random search is a strong baseline for
 these low-dimensional spaces).
+
+``autotune_kernel`` is the execution-side twin: given a compiled table it
+sweeps the kernel's ``(b_blk, r_blk, table_dtype, cell mode)`` space on
+the device jax is actually bound to, times each candidate end to end
+(padding included — what serving pays), and returns a ``TunePlan`` whose
+winner folds into a ``DeployConfig``.  ``CompiledModel.with_tuning``
+persists the plan in the artifact sidecar so a serve process cold-starts
+straight into the tuned configuration with no re-search.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import time
+from dataclasses import asdict, dataclass, field
 
 import numpy as np
 
+from repro.core.compile import CAMTable
+from repro.core.deploy import FAITHFUL_MODES, DeployConfig
 from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import Ensemble, GBDTParams, RFParams, train_gbdt, train_rf
 from repro.data.tabular import TabularDataset, accuracy_metric
+
+TUNE_SCHEMA_VERSION = 1
 
 
 @dataclass
@@ -113,3 +127,168 @@ def random_search(
             best, best_ens = trial, ens
     return SearchResult(best=best, trials=trials, ensemble=best_ens,
                         quantizer=quant)
+
+
+# ---------------------------------------------------------------------------
+# Kernel execution autotuner (kernel v2, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TunePlan:
+    """The winning kernel configuration of one ``autotune_kernel`` sweep.
+
+    Serializes into the compiled-artifact sidecar (``CompiledModel.save``
+    under the ``"tuning"`` key) so a reloaded artifact binds its engine
+    with the tuned block sizes and dtype instead of re-searching.
+    """
+
+    b_blk: int
+    r_blk: int
+    table_dtype: str  # resolved dtype ('uint8'/'uint16'/'int32'), not 'auto'
+    mode: str
+    backend: str
+    us_per_call: float
+    batch: int
+    trials: list[dict] = field(default_factory=list)  # full sweep record
+    env: dict = field(default_factory=dict)  # platform the sweep ran on
+    schema_version: int = TUNE_SCHEMA_VERSION
+
+    def apply(self, config: DeployConfig) -> DeployConfig:
+        """Fold the winner into ``config`` (the tuned execution knobs)."""
+        return config.replace(
+            b_blk=self.b_blk,
+            r_blk=self.r_blk,
+            table_dtype=self.table_dtype,
+            mode=self.mode,
+            backend=self.backend,
+        )
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunePlan":
+        known = {f.name for f in cls.__dataclass_fields__.values()}  # type: ignore[attr-defined]
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+def _tune_env() -> dict:
+    import jax
+
+    return {
+        "platform": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "jax": jax.__version__,
+    }
+
+
+def _time_margin(engine, q: np.ndarray, *, warmup: int, iters: int) -> float:
+    """Median wall microseconds of one end-to-end ``raw_margin`` call."""
+    for _ in range(warmup):
+        np.asarray(engine.raw_margin(q))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        np.asarray(engine.raw_margin(q))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def autotune_kernel(
+    model,
+    *,
+    deploy: DeployConfig | None = None,
+    batch: int = 256,
+    b_blks: tuple[int, ...] = (64, 128, 256),
+    r_blks: tuple[int, ...] = (128, 256, 512),
+    table_dtypes: tuple[str, ...] | None = None,
+    modes: tuple[str, ...] | None = None,
+    warmup: int = 1,
+    iters: int = 3,
+    seed: int = 0,
+) -> TunePlan:
+    """Sweep the kernel execution space on the bound device; return the plan.
+
+    ``model`` is a ``CAMTable`` or a ``repro.api.CompiledModel`` (whose
+    own deploy config seeds the sweep unless ``deploy`` overrides it).
+    Candidates are the cross product of ``b_blks`` × ``r_blks`` × the
+    admissible (table_dtype, mode) pairs, deduplicated by their RESOLVED
+    kernel layout — e.g. 'direct' and 'inclusive' collapse onto the same
+    packed-inclusive kernel, and the faithful modes only ever run int32.
+    Every candidate computes the same bits (the engine equivalence
+    contract), so the sweep is purely a performance search.
+
+    The winner is returned as a :class:`TunePlan`;
+    ``CompiledModel.with_tuning(plan)`` persists it in the artifact.
+    """
+    from repro.core.engine import XTimeEngine, resolve_table_dtype
+
+    if isinstance(model, CAMTable):
+        table = model
+    else:  # CompiledModel — avoid importing repro.api here (cycle)
+        table = model.table
+        if deploy is None:
+            deploy = getattr(model, "deploy", None)
+    deploy = deploy or DeployConfig()
+
+    if modes is None:
+        # faithful base modes are a deliberate choice — keep them; the fast
+        # modes sweep both int-compare flavours
+        modes = (deploy.mode,) if deploy.mode in FAITHFUL_MODES else (
+            "direct", "inclusive",
+        )
+    if table_dtypes is None:
+        table_dtypes = ("auto", "int32")
+
+    seen: set[tuple] = set()
+    candidates: list[DeployConfig] = []
+    for mode in modes:
+        for dt in table_dtypes:
+            if mode in FAITHFUL_MODES and dt not in ("auto", "int32"):
+                continue
+            cfg = deploy.replace(mode=mode, table_dtype=dt)
+            resolved = resolve_table_dtype(table, cfg)
+            kernel_mode = (
+                "inclusive" if np.dtype(resolved).kind == "u" else mode
+            )
+            for b_blk in b_blks:
+                for r_blk in r_blks:
+                    key = (b_blk, r_blk, resolved, kernel_mode)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    candidates.append(
+                        cfg.replace(
+                            b_blk=b_blk, r_blk=r_blk, table_dtype=resolved
+                        )
+                    )
+
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, table.n_bins, size=(batch, table.n_features))
+    trials: list[dict] = []
+    best: tuple[float, DeployConfig] | None = None
+    for cfg in candidates:
+        engine = XTimeEngine.from_config(table, cfg)
+        us = _time_margin(engine, q, warmup=warmup, iters=iters)
+        trials.append({
+            "b_blk": cfg.b_blk, "r_blk": cfg.r_blk,
+            "table_dtype": cfg.table_dtype, "mode": cfg.mode,
+            "us_per_call": round(us, 2),
+        })
+        if best is None or us < best[0]:
+            best = (us, cfg)
+
+    assert best is not None, "empty autotune candidate set"
+    us, cfg = best
+    return TunePlan(
+        b_blk=cfg.b_blk,
+        r_blk=cfg.r_blk,
+        table_dtype=cfg.table_dtype,
+        mode=cfg.mode,
+        backend=cfg.backend,
+        us_per_call=round(us, 2),
+        batch=batch,
+        trials=trials,
+        env=_tune_env(),
+    )

@@ -1,30 +1,39 @@
-"""Pallas TPU kernel for the X-TIME CAM search + leaf accumulation.
+"""Pallas TPU kernel for the X-TIME CAM search + leaf accumulation (v2).
 
 This is the compute hot-spot the paper implements in analog hardware: a
 massively parallel range compare between a query tile and every stored CAM
 row, AND-reduced over feature columns (the match line), followed by the
 leaf-value accumulation (MMR + SRAM + ACC path).
 
-TPU adaptation (see DESIGN.md §2):
-  * the (B_blk x R_blk x F_blk) range compare is VPU work, evaluated in
-    VMEM one feature chunk at a time with a running AND so the working set
-    stays at (B_blk x R_blk x F_chunk) int32 instead of the full feature
-    axis;
-  * the leaf lookup-and-accumulate becomes an MXU matmul
-    ``match(B_blk, R_blk) @ leaf(R_blk, C)`` accumulated across row tiles
-    in the output block — the systolic replacement for the analog
-    wired-OR / sequential MMR (a strict improvement over the paper's
-    Eq. 5 bubbles, documented as such);
-  * grid = (B/B_blk, R/R_blk); the row axis is ``arbitrary`` (sequential)
-    so the output tile accumulates in place; the batch axis is parallel.
+Kernel v2 (DESIGN.md §10) differs from the v1 layout in three ways:
+
+  * **compact dtypes** — the threshold tables stream in the narrowest
+    dtype the bin grid permits (uint8 for the paper's native 256 bins,
+    uint16 to 65536, int32 beyond / for the faithful cell modes).  Packed
+    tables store INCLUSIVE upper bounds so [0, n_bins) fits the dtype;
+    the compare runs natively (no upcast) — 4x less VMEM traffic than
+    the v1 int32 tables at identical results;
+  * **feature grid dimension** — the in-kernel Python loop over feature
+    chunks is replaced by a third (feature) grid axis.  The running AND
+    accumulates in a (b_blk, r_blk) VMEM scratch across feature tiles,
+    so the working set is (r_blk, f_blk) instead of (r_blk, F_pad);
+  * **wildcard tile skipping** — a per-(row-tile, feature-tile) activity
+    mask lets the kernel skip the compare for tiles that are all
+    wildcards (an all-wildcard tile matches everything).  The compiler's
+    wildcard-aware row ordering maximizes such tiles.
+
+Grid = (B/b_blk, R/r_blk, F_pad/f_blk); the batch axis is parallel, the
+row and feature axes are ``arbitrary`` (sequential) so the scratch AND
+and the output row-accumulation run in place.  The leaf matmul
+``match(B_blk, R_blk) @ leaf(R_blk, C)`` fires once per row tile, on the
+MXU — the systolic replacement for the analog wired-OR / sequential MMR.
 
 The ``mode`` switch selects the cell-level comparison:
-  'direct'    — ideal 8/16-bit compare (TPU-native, the optimized form),
+  'direct'    — ideal 8/16-bit compare on exclusive-high int32 tables,
+  'inclusive' — the packed-table compare (low <= q <= high, native dtype),
   'msb_lsb'   — the paper's Eq. 3 macro-cell arithmetic (faithful mode),
   'two_cycle' — Table-I cycle-accurate discharge semantics.
-All three are bit-equivalent (property-tested); on TPU 'direct' is fastest
-since there is no 4-bit device constraint — that *difference* vs the paper
-is a hardware-adaptation note, not a behavioural one.
+All are bit-equivalent on equivalently-encoded tables (property-tested).
 """
 
 from __future__ import annotations
@@ -39,104 +48,152 @@ from repro.core import precision
 
 _CELL_MATCH = {
     "direct": precision.match_direct,
-    "inclusive": precision.match_inclusive,  # compact uint8 tables (§Perf X1)
+    "inclusive": precision.match_inclusive,  # compact tables (§Perf X1)
     "msb_lsb": precision.match_msb_lsb,
     "two_cycle": precision.match_two_cycle,
 }
 
-# feature-axis chunk for the running AND; 128 lanes wide, small enough that
-# the (B_blk, R_blk, F_CHUNK) int32 compare temp stays ~2 MiB in VMEM.
+# default feature-axis tile; 128 lanes wide, small enough that the
+# (b_blk, r_blk, f_blk) compare temp stays well under VMEM budget.
 F_CHUNK = 128
 
 
+def default_interpret() -> bool:
+    """Resolve the 'auto' interpret policy: compiled on TPU, interpreter
+    everywhere else (running the interpreter on real hardware silently
+    costs orders of magnitude — the old ``interpret=True`` default bug)."""
+    return jax.default_backend() != "tpu"
+
+
+def pallas_available() -> bool:
+    """Can the v2 kernel run here?  The VMEM scratch accumulator needs
+    ``jax.experimental.pallas.tpu``; a jaxlib without it cannot run the
+    kernel even in interpret mode — the engine falls back to the jnp
+    oracle instead (same bits)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+        return hasattr(pltpu, "VMEM")
+    except ImportError:  # pragma: no cover - jaxlib-build dependent
+        return False
+
+
 def _cam_match_kernel(
-    q_ref,  # (B_blk, F_pad) int32
-    low_ref,  # (R_blk, F_pad) int32
-    high_ref,  # (R_blk, F_pad) int32
+    mask_ref,  # (1, 1) int32 — tile activity for this (row, feature) tile
+    q_ref,  # (B_blk, f_blk) table dtype
+    low_ref,  # (R_blk, f_blk) table dtype
+    high_ref,  # (R_blk, f_blk) table dtype
     leaf_ref,  # (R_blk, C_pad) float32
     out_ref,  # (B_blk, C_pad) float32
+    acc_ref,  # (B_blk, R_blk) int32 VMEM scratch — the running match line
     *,
     mode: str,
-    f_pad: int,
+    n_f_tiles: int,
 ):
     j = pl.program_id(1)
+    k = pl.program_id(2)
     cell = _CELL_MATCH[mode]
 
-    q = q_ref[...]  # (B_blk, F_pad)
-    low = low_ref[...]  # (R_blk, F_pad)
-    high = high_ref[...]
-    match = None
-    for f0 in range(0, f_pad, F_CHUNK):
-        sl = slice(f0, f0 + F_CHUNK)
-        qc = q[:, None, sl]  # (B_blk, 1, fc)
-        lo = low[None, :, sl]  # (1, R_blk, fc)
-        hi = high[None, :, sl]
-        ok = jnp.all(cell(qc, lo, hi), axis=-1)  # (B_blk, R_blk)
-        match = ok if match is None else (match & ok)
+    @pl.when(k == 0)
+    def _precharge():  # the match line starts charged (all-match)
+        acc_ref[...] = jnp.ones_like(acc_ref[...])
 
-    partial = jax.lax.dot(
-        match.astype(jnp.float32),
-        leaf_ref[...],
-        preferred_element_type=jnp.float32,
-    )  # (B_blk, C_pad) on the MXU
+    @pl.when(mask_ref[0, 0] != 0)
+    def _compare():  # skipped for all-wildcard tiles (they match everything)
+        q = q_ref[...][:, None, :]  # (B_blk, 1, f_blk)
+        lo = low_ref[...][None, :, :]  # (1, R_blk, f_blk)
+        hi = high_ref[...][None, :, :]
+        ok = jnp.all(cell(q, lo, hi), axis=-1)  # (B_blk, R_blk)
+        acc_ref[...] = acc_ref[...] & ok.astype(jnp.int32)
 
-    @pl.when(j == 0)
-    def _init():
-        out_ref[...] = partial
+    @pl.when(k == n_f_tiles - 1)
+    def _accumulate():  # MXU leaf gather once the match line is final
+        partial = jax.lax.dot(
+            acc_ref[...].astype(jnp.float32),
+            leaf_ref[...],
+            preferred_element_type=jnp.float32,
+        )  # (B_blk, C_pad)
 
-    @pl.when(j > 0)
-    def _acc():
-        out_ref[...] += partial
+        @pl.when(j == 0)
+        def _init():
+            out_ref[...] = partial
+
+        @pl.when(j > 0)
+        def _acc():
+            out_ref[...] += partial
 
 
 @functools.partial(
-    jax.jit, static_argnames=("b_blk", "r_blk", "mode", "interpret")
+    jax.jit,
+    static_argnames=("b_blk", "r_blk", "f_blk", "mode", "interpret"),
 )
 def cam_match_pallas(
-    q: jnp.ndarray,  # (B, F_pad) int32 — pre-padded (see ops.py)
-    low: jnp.ndarray,  # (R, F_pad) int32
-    high: jnp.ndarray,  # (R, F_pad) int32
+    q: jnp.ndarray,  # (B, F_pad) table dtype — pre-padded (see ops.py)
+    low: jnp.ndarray,  # (R, F_pad) table dtype
+    high: jnp.ndarray,  # (R, F_pad) table dtype
     leaf: jnp.ndarray,  # (R, C_pad) float32
+    tile_mask: jnp.ndarray | None = None,  # (R/r_blk, F_pad/f_blk) int32
     *,
     b_blk: int = 128,
     r_blk: int = 256,
+    f_blk: int = F_CHUNK,
     mode: str = "direct",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """(B, C_pad) accumulated logits.  All dims must divide their blocks."""
+    """(B, C_pad) accumulated logits.  All dims must divide their blocks.
+
+    ``tile_mask[j, k] == 0`` marks an all-wildcard (always-match) tile the
+    compare may skip; ``None`` compares every tile.  ``interpret=None``
+    resolves via :func:`default_interpret` (compiled on TPU only).
+    """
     B, F_pad = q.shape
     R = low.shape[0]
     C_pad = leaf.shape[1]
+    if interpret is None:
+        interpret = default_interpret()
     if B % b_blk or R % r_blk:
         raise ValueError(f"B={B} R={R} must be multiples of ({b_blk}, {r_blk})")
-    if F_pad % F_CHUNK:
-        raise ValueError(f"F_pad={F_pad} must be a multiple of {F_CHUNK}")
+    if F_pad % f_blk:
+        raise ValueError(f"F_pad={F_pad} must be a multiple of f_blk={f_blk}")
+    n_f_tiles = F_pad // f_blk
+    if tile_mask is None:
+        tile_mask = jnp.ones((R // r_blk, n_f_tiles), dtype=jnp.int32)
 
-    grid = (B // b_blk, R // r_blk)
-    kernel = functools.partial(_cam_match_kernel, mode=mode, f_pad=F_pad)
+    grid = (B // b_blk, R // r_blk, n_f_tiles)
+    kernel = functools.partial(_cam_match_kernel, mode=mode, n_f_tiles=n_f_tiles)
 
+    if not pallas_available():  # pragma: no cover - jaxlib-build dependent
+        raise RuntimeError(
+            "pallas TPU scratch allocation unavailable on this jaxlib; "
+            "use the jnp backend (the engine falls back automatically)"
+        )
+    from jax.experimental.pallas import tpu as pltpu
+
+    scratch = [pltpu.VMEM((b_blk, r_blk), jnp.int32)]
     compiler_params = None
     if not interpret:
-        try:  # batch axis parallel, row axis sequential (in-place accumulate)
-            from jax.experimental.pallas import tpu as pltpu
-
+        try:
+            # batch axis parallel; row + feature axes sequential (the
+            # scratch AND and output tile accumulate in place)
             compiler_params = pltpu.CompilerParams(
-                dimension_semantics=("parallel", "arbitrary")
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")
             )
-        except (ImportError, AttributeError):  # pragma: no cover
+        except AttributeError:  # pragma: no cover - older pltpu API
             compiler_params = None
 
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((b_blk, F_pad), lambda i, j: (i, 0)),  # query tile
-            pl.BlockSpec((r_blk, F_pad), lambda i, j: (j, 0)),  # CAM rows (low)
-            pl.BlockSpec((r_blk, F_pad), lambda i, j: (j, 0)),  # CAM rows (high)
-            pl.BlockSpec((r_blk, C_pad), lambda i, j: (j, 0)),  # leaf matrix
+            pl.BlockSpec((1, 1), lambda i, j, k: (j, k)),  # tile activity
+            pl.BlockSpec((b_blk, f_blk), lambda i, j, k: (i, k)),  # queries
+            pl.BlockSpec((r_blk, f_blk), lambda i, j, k: (j, k)),  # CAM low
+            pl.BlockSpec((r_blk, f_blk), lambda i, j, k: (j, k)),  # CAM high
+            pl.BlockSpec((r_blk, C_pad), lambda i, j, k: (j, 0)),  # leaf matrix
         ],
-        out_specs=pl.BlockSpec((b_blk, C_pad), lambda i, j: (i, 0)),
+        out_specs=pl.BlockSpec((b_blk, C_pad), lambda i, j, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, C_pad), jnp.float32),
+        scratch_shapes=scratch,
         compiler_params=compiler_params,
         interpret=interpret,
-    )(q, low, high, leaf)
+    )(tile_mask, q, low, high, leaf)

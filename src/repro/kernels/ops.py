@@ -3,9 +3,15 @@
 Handles the padding contract so callers can pass ragged real-world shapes:
   * batch  -> multiple of b_blk          (pad queries with zeros)
   * rows   -> multiple of r_blk          (pad with never-match ranges)
-  * feats  -> multiple of F_CHUNK lanes  (pad with always-match ranges)
+  * feats  -> multiple of f_blk lanes    (pad with always-match ranges)
   * chans  -> multiple of 8              (pad leaf channels with zeros)
 and strips the padding from the output.
+
+Kernel v2 additions (DESIGN.md §10): ``pack_tables`` converts the padded
+exclusive-high int32 layout into the compact inclusive-high form in a
+narrow unsigned dtype, and ``wildcard_tile_mask`` precomputes the
+per-(row-tile, feature-tile) activity map the kernel uses to skip
+all-wildcard compare tiles.
 """
 
 from __future__ import annotations
@@ -32,11 +38,16 @@ def pad_tables(
     r_blk: int = 256,
     c_mult: int = 8,
     n_bins: int | None = None,
+    f_blk: int = F_CHUNK,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Pad the compiled CAM table to kernel-friendly shapes (host-side)."""
+    """Pad the compiled CAM table to kernel-friendly shapes (host-side).
+
+    Output stays in the canonical exclusive-high int32 layout; use
+    :func:`pack_tables` for the compact-dtype kernel form.
+    """
     R, F = low.shape
     C = leaf_matrix.shape[1]
-    R_pad, F_pad, C_pad = _ceil_to(R, r_blk), _ceil_to(F, F_CHUNK), _ceil_to(C, c_mult)
+    R_pad, F_pad, C_pad = _ceil_to(R, r_blk), _ceil_to(F, f_blk), _ceil_to(C, c_mult)
     big = np.int32(n_bins if n_bins is not None else (int(high.max()) + 1))
 
     lo = np.zeros((R_pad, F_pad), dtype=np.int32)
@@ -51,13 +62,134 @@ def pad_tables(
     return lo, hi, lm
 
 
-def pad_queries(q: np.ndarray | jnp.ndarray, f_pad: int, b_blk: int = 128) -> jnp.ndarray:
+def pack_tables(
+    low: np.ndarray,
+    high: np.ndarray,
+    leaf_matrix: np.ndarray,
+    *,
+    r_blk: int = 256,
+    c_mult: int = 8,
+    n_bins: int | None = None,
+    f_blk: int = F_CHUNK,
+    dtype: str = "int32",
+    inclusive: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, bool]:
+    """Pad + pack the CAM table for the kernel; returns (lo, hi, leaf, incl).
+
+    ``dtype`` is the kernel table dtype.  The packed (unsigned) dtypes
+    always store INCLUSIVE upper bounds so the full grid [0, n_bins)
+    fits (n_bins=256 would overflow uint8 as an exclusive bound);
+    ``inclusive=True`` forces the inclusive encoding for int32 too (the
+    engine's mode='inclusive').  Encoding map:
+
+      real cells        low,  high-1       (int32 keeps high-1 exactly,
+                                            so degenerate high=0 cells
+                                            stay unmatchable at -1)
+      always-match pad  0,    n_bins-1
+      never-match rows  1,    0            (low > high, unmatchable)
+
+    An unsigned dtype additionally requires every table value to fit its
+    range — compile-generated tables always do (high >= low+1 >= 1);
+    perturbed ones (defect injection) must use the int32 layout.
+    """
+    dt = np.dtype(dtype)
+    if inclusive is None:
+        inclusive = dt.kind == "u"
+    if dt.kind == "u" and not inclusive:
+        raise ValueError("packed unsigned tables require the inclusive encoding")
+
+    hi_enc = (high.astype(np.int64) - 1) if inclusive else high.astype(np.int64)
+    lo_enc = low.astype(np.int64)
+    if dt.kind == "u":
+        lo_b = int(lo_enc.min(initial=0)), int(lo_enc.max(initial=0))
+        hi_b = int(hi_enc.min(initial=0)), int(hi_enc.max(initial=0))
+        top = np.iinfo(dt).max
+        if lo_b[0] < 0 or hi_b[0] < 0 or lo_b[1] > top or hi_b[1] > top:
+            raise ValueError(
+                f"table values (low in {lo_b}, inclusive high in {hi_b}) "
+                f"do not fit table dtype {dtype!r}; use 'int32' for "
+                "perturbed/out-of-grid tables"
+            )
+
+    R, F = low.shape
+    C = leaf_matrix.shape[1]
+    R_pad, F_pad, C_pad = _ceil_to(R, r_blk), _ceil_to(F, f_blk), _ceil_to(C, c_mult)
+    big = n_bins if n_bins is not None else (int(high.max(initial=0)) + 1)
+
+    lo = np.zeros((R_pad, F_pad), dtype=np.int64)
+    hi = np.full(  # always-match columns in the chosen encoding
+        (R_pad, F_pad), big - 1 if inclusive else big, dtype=np.int64
+    )
+    lo[:R, :F] = lo_enc
+    hi[:R, :F] = hi_enc
+    lo[R:, :] = 1  # never-match rows: low=1 > high=0 in both encodings
+    hi[R:, :] = 0
+
+    lm = np.zeros((R_pad, C_pad), dtype=np.float32)
+    lm[:R, :C] = leaf_matrix
+    out_dt = dt if dt.kind == "u" else np.int32
+    return lo.astype(out_dt), hi.astype(out_dt), lm, inclusive
+
+
+def wildcard_tile_mask(
+    low: np.ndarray,
+    high: np.ndarray,
+    *,
+    r_blk: int,
+    f_blk: int,
+    n_bins: int,
+    inclusive: bool,
+) -> np.ndarray:
+    """(R/r_blk, F/f_blk) int32 — 0 marks an all-wildcard compare tile.
+
+    Operates on PADDED (and possibly packed) tables: a wildcard cell is
+    the full range [0, n_bins) in whichever encoding ``inclusive``
+    names.  Never-match padding rows are not wildcards, so their tiles
+    stay active and keep their rows unmatchable.
+    """
+    R, F = low.shape
+    if R % r_blk or F % f_blk:
+        raise ValueError(f"padded shape ({R}, {F}) must tile by ({r_blk}, {f_blk})")
+    top = n_bins - 1 if inclusive else n_bins
+    act = ~((low.astype(np.int64) == 0) & (high.astype(np.int64) >= top))
+    tiles = act.reshape(R // r_blk, r_blk, F // f_blk, f_blk).any(axis=(1, 3))
+    return tiles.astype(np.int32)
+
+
+def pad_queries(
+    q: np.ndarray | jnp.ndarray,
+    f_pad: int,
+    b_blk: int = 128,
+    dtype: str = "int32",
+) -> jnp.ndarray:
     B, _ = q.shape
-    return pad_to_bucket(q, _ceil_to(B, b_blk), f_pad)
+    return pad_to_bucket(q, _ceil_to(B, b_blk), f_pad, dtype=dtype)
+
+
+def check_query_range(q: np.ndarray | jnp.ndarray, dtype: str) -> None:
+    """Reject bins a narrowing cast would WRAP (eager, host-side).
+
+    The v1 int32 compare was accidentally lenient with out-of-range bins
+    (value >= high fails every cell); a packed engine casting 300 to
+    uint8 would wrap it to 44 and match rows it must not.  Callers
+    binning with the model's own quantizer never trip this.
+    """
+    dt = np.dtype(dtype)
+    if dt.kind != "u" or q.size == 0:
+        return
+    if np.dtype(q.dtype).kind == "u" and np.dtype(q.dtype).itemsize <= dt.itemsize:
+        return  # widening or same-width unsigned: no wrap possible
+    mn, mx = int(q.min()), int(q.max())
+    if mn < 0 or mx > np.iinfo(dt).max:
+        raise ValueError(
+            f"query bins in [{mn}, {mx}] do not fit table dtype {dtype!r} "
+            f"(max {np.iinfo(dt).max}); were these binned with the model's "
+            "quantizer?"
+        )
 
 
 def pad_to_bucket(
-    q: np.ndarray | jnp.ndarray, bucket_b: int, f_pad: int
+    q: np.ndarray | jnp.ndarray, bucket_b: int, f_pad: int, dtype: str = "int32"
 ) -> jnp.ndarray:
     """Pad a coalesced query batch to an explicit serving-bucket shape.
 
@@ -66,37 +198,44 @@ def pad_to_bucket(
     zero, which the always-match column padding of ``pad_tables`` ignores.
     Keeping the target shape explicit (instead of the next ``b_blk``
     multiple) is what lets the serving layer hit one ``jax.jit`` cache
-    entry per bucket rather than one per request shape.
+    entry per bucket rather than one per request shape.  ``dtype`` is the
+    engine's table dtype — queries compare natively against packed tables.
     """
     B, F = q.shape
     if B > bucket_b:
         raise ValueError(f"batch {B} exceeds bucket {bucket_b}")
     if F > f_pad:
         raise ValueError(f"features {F} exceed padded width {f_pad}")
-    out = jnp.zeros((bucket_b, f_pad), dtype=jnp.int32)
-    return out.at[:B, :F].set(q.astype(jnp.int32))
+    check_query_range(q, dtype)
+    out = jnp.zeros((bucket_b, f_pad), dtype=np.dtype(dtype))
+    return out.at[:B, :F].set(q.astype(np.dtype(dtype)))
 
 
 @functools.partial(
-    jax.jit, static_argnames=("b_blk", "r_blk", "mode", "interpret", "out_b", "out_c")
+    jax.jit,
+    static_argnames=(
+        "b_blk", "r_blk", "f_blk", "mode", "interpret", "out_b", "out_c",
+    ),
 )
 def cam_match(
     q_padded: jnp.ndarray,
     low: jnp.ndarray,
     high: jnp.ndarray,
     leaf: jnp.ndarray,
+    tile_mask: jnp.ndarray | None = None,
     *,
     out_b: int,
     out_c: int,
     b_blk: int = 128,
     r_blk: int = 256,
+    f_blk: int = F_CHUNK,
     mode: str = "direct",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Kernel entry on pre-padded operands; returns unpadded (out_b, out_c)."""
     out = cam_match_pallas(
-        q_padded, low, high, leaf,
-        b_blk=b_blk, r_blk=r_blk, mode=mode, interpret=interpret,
+        q_padded, low, high, leaf, tile_mask,
+        b_blk=b_blk, r_blk=r_blk, f_blk=f_blk, mode=mode, interpret=interpret,
     )
     return out[:out_b, :out_c]
 

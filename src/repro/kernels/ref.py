@@ -49,6 +49,13 @@ def cam_match_bits_ref(
     q: jnp.ndarray, low: jnp.ndarray, high: jnp.ndarray, *, mode: str = "direct"
 ) -> jnp.ndarray:
     """(B, R) boolean match lines only (for MMR / debug paths)."""
+    if mode == "inclusive":  # packed tables compare in their native dtype
+        return jnp.all(
+            precision.match_inclusive(
+                q[:, None, :], low[None, :, :], high[None, :, :]
+            ),
+            axis=-1,
+        )
     qe = q[:, None, :].astype(jnp.int32)
     lo = low[None, :, :].astype(jnp.int32)
     hi = high[None, :, :].astype(jnp.int32)

@@ -190,7 +190,8 @@ class MicroBatcher:
         size = self.bucket.select(n)
         q = np.concatenate([p.q_bins for p in batch], axis=0)
         q_padded = kops.pad_to_bucket(
-            jnp.asarray(q), size, self.engine.arrays.f_pad
+            jnp.asarray(q), size, self.engine.arrays.f_pad,
+            dtype=self.engine.table_dtype,
         )
         out = np.asarray(self.engine.padded_fn(self.kind)(q_padded))
         results: dict[int, np.ndarray] = {}

@@ -10,7 +10,10 @@ artifact's ``DeployConfig`` to the registry's mesh.  On a multi-device
 mesh that binding resolves ``spmd='auto'`` to the shard_map scale-out
 path (explicit NoC-plan collectives, DESIGN.md §8) with no caller
 changes; serving buckets stay correct because the batcher keys off
-``XTimeEngine.batch_multiple``.
+``XTimeEngine.batch_multiple``.  An autotuned artifact
+(``CompiledModel.with_tuning``, DESIGN.md §10) cold-starts straight
+into its tuned kernel configuration — block sizes and packed table
+dtype come from the persisted plan, no re-search on reload.
 
 Hot swap: re-registering a name atomically replaces its engine and bumps
 the version; in-flight flushes keep the old engine object (Python
@@ -71,6 +74,13 @@ class ServedModel:
     @property
     def deploy(self) -> DeployConfig:
         return self.artifact.deploy
+
+    @property
+    def tuning(self) -> dict | None:
+        """Persisted autotune plan the engine was cold-started with
+        (``repro.core.tune.autotune_kernel`` → ``CompiledModel.with_tuning``);
+        None when the artifact was never autotuned."""
+        return self.artifact.tuning
 
 
 class TableRegistry:

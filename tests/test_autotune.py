@@ -1,0 +1,142 @@
+"""Kernel autotuner: sweep -> TunePlan -> artifact sidecar -> cold start.
+
+The persistence contract (DESIGN.md §10): a tuned artifact saved to disk
+binds its engine with the tuned (b_blk, r_blk, table_dtype, mode) on any
+later host — ``TableRegistry`` cold starts included — with no re-search.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import CompiledModel, build
+from repro.core.deploy import DeployConfig
+from repro.core.trees import GBDTParams, train_gbdt
+from repro.core.tune import TunePlan, autotune_kernel
+from repro.serve.registry import TableRegistry
+
+
+@pytest.fixture(scope="module")
+def artifact():
+    rng = np.random.default_rng(0)
+    xb = rng.integers(0, 256, size=(256, 8))
+    y = (xb[:, 0].astype(np.int64) + xb[:, 3] > 250).astype(np.int64)
+    ens = train_gbdt(xb, y, task="binary", n_bins=256,
+                     params=GBDTParams(n_rounds=4, max_leaves=16))
+    return build(ens), xb
+
+
+def _quick_plan(cm):
+    return autotune_kernel(
+        cm, batch=64, b_blks=(32, 64), r_blks=(64, 128), warmup=1, iters=1,
+    )
+
+
+def test_autotune_sweeps_and_picks_winner(artifact):
+    cm, _ = artifact
+    plan = _quick_plan(cm)
+    assert plan.b_blk in (32, 64) and plan.r_blk in (64, 128)
+    assert plan.table_dtype in ("uint8", "uint16", "int32")  # resolved, not 'auto'
+    assert plan.us_per_call > 0
+    # full sweep recorded: every (b, r, dtype/kernel-mode) candidate timed
+    assert len(plan.trials) >= 8
+    assert {t["us_per_call"] >= 0 for t in plan.trials} == {True}
+    assert plan.env["platform"] == "cpu"
+    winner_us = min(t["us_per_call"] for t in plan.trials)
+    assert plan.us_per_call == winner_us
+
+
+def test_plan_round_trips_and_applies(artifact):
+    cm, _ = artifact
+    plan = _quick_plan(cm)
+    assert TunePlan.from_dict(plan.to_dict()) == plan
+    cfg = plan.apply(DeployConfig())
+    assert (cfg.b_blk, cfg.r_blk, cfg.table_dtype, cfg.mode) == (
+        plan.b_blk, plan.r_blk, plan.table_dtype, plan.mode,
+    )
+
+
+def test_faithful_mode_sweep_stays_int32(artifact):
+    cm, _ = artifact
+    plan = autotune_kernel(
+        cm, deploy=DeployConfig(mode="msb_lsb"), batch=32,
+        b_blks=(32,), r_blks=(64,), iters=1,
+    )
+    assert plan.mode == "msb_lsb"
+    assert plan.table_dtype == "int32"
+
+
+def test_tuned_artifact_save_load_round_trip(artifact, tmp_path):
+    cm, xb = artifact
+    plan = _quick_plan(cm)
+    tuned = cm.with_tuning(plan)
+    assert tuned.tuning == plan.to_dict()
+    assert tuned.deploy.b_blk == plan.b_blk
+    assert tuned.summary()["tuned"] is True
+
+    tuned.save(tmp_path / "m")
+    loaded = CompiledModel.load(tmp_path / "m")
+    # the autotune plan survives the round trip, knobs already folded in
+    assert loaded.tuning == plan.to_dict()
+    assert loaded.tune_plan() == plan
+    assert loaded.deploy.b_blk == plan.b_blk
+    assert loaded.deploy.r_blk == plan.r_blk
+    assert loaded.deploy.table_dtype == plan.table_dtype
+    # and the tuned engine computes the same bits as the untuned one
+    m0 = np.asarray(cm.engine().raw_margin(xb))
+    m1 = np.asarray(loaded.engine().raw_margin(xb))
+    np.testing.assert_array_equal(m0, m1)
+
+
+def test_registry_cold_start_uses_tuned_plan(artifact, tmp_path):
+    cm, xb = artifact
+    plan = _quick_plan(cm)
+    cm.with_tuning(plan).save(tmp_path / "m")
+
+    reg = TableRegistry()
+    entry = reg.register("churn", CompiledModel.load(tmp_path / "m"))
+    assert entry.tuning == plan.to_dict()
+    assert entry.engine.b_blk == plan.b_blk
+    assert entry.engine.r_blk == plan.r_blk
+    assert entry.engine.table_dtype == plan.table_dtype
+    np.testing.assert_array_equal(
+        np.asarray(entry.engine.raw_margin(xb)),
+        np.asarray(cm.engine().raw_margin(xb)),
+    )
+
+
+def test_untuned_artifact_has_no_plan(artifact, tmp_path):
+    cm, _ = artifact
+    assert cm.tuning is None and cm.tune_plan() is None
+    cm.save(tmp_path / "m")
+    assert CompiledModel.load(tmp_path / "m").tuning is None
+
+
+def test_v1_artifact_still_loads(artifact, tmp_path):
+    """Pre-kernel-v2 artifacts (schema_version 1: int32 exclusive-high
+    arrays, no table_dtype) must keep loading unchanged."""
+    import json
+
+    import numpy as np
+
+    cm, xb = artifact
+    cm.save(tmp_path / "m")
+    sidecar = json.loads((tmp_path / "m.json").read_text())
+    assert sidecar["schema_version"] == 2
+    # rewrite as a faithful v1 artifact
+    sidecar["schema_version"] = 1
+    del sidecar["table"]["table_dtype"]
+    (tmp_path / "m.json").write_text(json.dumps(sidecar))
+    with np.load(tmp_path / "m.npz") as npz:
+        arrays = dict(npz)
+    arrays["low"] = cm.table.low.astype(np.int32)
+    arrays["high"] = cm.table.high.astype(np.int32)
+    np.savez_compressed(tmp_path / "m.npz", **arrays)
+
+    old = CompiledModel.load(tmp_path / "m")
+    assert old.table.table_dtype == "int32"  # pre-v2 layout, as saved
+    np.testing.assert_array_equal(old.table.low, cm.table.low)
+    np.testing.assert_array_equal(old.table.high, cm.table.high)
+    np.testing.assert_array_equal(
+        np.asarray(old.engine().raw_margin(xb)),
+        np.asarray(cm.engine().raw_margin(xb)),
+    )

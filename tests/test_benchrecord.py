@@ -149,6 +149,41 @@ def test_gate_fails_on_synthetic_regression_beyond_tolerance(
     assert "baseline gate: OK" in proc.stderr
 
 
+def test_per_entry_tolerance_overrides_global():
+    """A baseline record's tolerance_pct replaces the global --tolerance
+    for that entry only — tight kernel rows gate harder, noisy rows
+    looser, in one baseline file."""
+    from benchmarks.run import compare_to_baseline
+
+    baseline = _payload({("m", "tight"): 100.0, ("m", "loose"): 100.0,
+                         ("m", "plain"): 100.0})
+    for rec in baseline["records"]:
+        if rec["name"] == "tight":
+            rec["tolerance_pct"] = 10
+        elif rec["name"] == "loose":
+            rec["tolerance_pct"] = 1000
+    current = _payload({("m", "tight"): 150.0, ("m", "loose"): 500.0,
+                        ("m", "plain"): 150.0})["records"]
+    # global 300%: 'plain' at 1.5x passes, 'loose' at 5x passes via its
+    # wide override, 'tight' at 1.5x FAILS via its 10% override
+    regressions, lines = compare_to_baseline(current, baseline, 300.0)
+    assert [r["name"] for r in regressions] == ["tight"]
+    assert regressions[0]["tolerance_pct"] == 10
+    assert any("tol +10%" in ln for ln in lines)
+
+
+def test_validator_checks_tolerance_pct():
+    from benchmarks.run import validate_payload
+
+    payload = _payload({("m", "a"): 1.0})
+    payload["records"][0]["tolerance_pct"] = 150
+    validate_payload(payload)  # optional, additive
+    for bad in ("wide", 0, -5):
+        payload["records"][0]["tolerance_pct"] = bad
+        with pytest.raises(ValueError):
+            validate_payload(payload)
+
+
 def test_committed_baseline_is_valid_and_covers_smoke_modules():
     from benchmarks.run import check_file
 
@@ -157,7 +192,26 @@ def test_committed_baseline_is_valid_and_covers_smoke_modules():
     )
     assert not payload["failures"]
     modules = {r["module"] for r in payload["records"]}
-    assert {"fig11_scaling", "serve_bench", "ingest_bench"} <= modules
+    assert {"fig11_scaling", "serve_bench", "ingest_bench",
+            "kernel_bench"} <= modules
+    # the kernel microbench rows carry their hand-annotated per-entry
+    # tolerances (benchmarks/README.md) — losing them on a baseline
+    # refresh should fail here, not silently widen the gate to 300%
+    kernel_rows = [r for r in payload["records"]
+                   if r["module"] == "kernel_bench"]
+    assert kernel_rows
+    assert all(r.get("tolerance_pct") for r in kernel_rows)
+    # packed-path speedup is recorded in the committed record
+    assert any("speedup_vs_int32" in r["derived"] for r in kernel_rows)
+
+
+def test_committed_records_are_valid():
+    from benchmarks.run import check_path
+
+    checked = check_path(os.path.join(ROOT, "benchmarks", "records"))
+    assert checked, "no committed BENCH records"
+    for _, payload in checked:
+        assert not payload["failures"]
 
 
 def test_aggregate_bench_trajectory(bench_file, tmp_path, capsys):
