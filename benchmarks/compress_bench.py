@@ -1,0 +1,110 @@
+"""Compression benchmark: RETENTION-style row savings at paper scale.
+
+Times ``compress_table`` on deep duplicate-split synthetic ensembles
+(the population the pass exists for — trained boosters rarely emit
+contradictory duplicate splits, ``random_deep_ensemble`` always does)
+and records the achieved row savings.  Before any timing, the compressed
+table is verified BIT-EQUAL to the uncompressed int32 oracle — a bench
+that went fast by answering differently must fail, not record.
+
+The ``rows_after_t512_d8`` entry is a REGRESSION GATE, not a timing: its
+``us_per_call`` field carries the compressed row count of the 512-tree
+depth-8 model, with a tight baseline ``tolerance_pct``, so a change that
+quietly stops merging/pruning rows fails CI the same way a slow kernel
+does.  The acceptance floor (>= 30% rows saved at that size) is asserted
+here as well — the committed baseline documents the actual number.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import budget, time_call
+from repro.core.compile import compile_ensemble
+from repro.core.compress import compress_table
+from repro.core.deploy import DeployConfig
+from repro.core.engine import XTimeEngine
+from repro.core.perfmodel import kernel_traffic_model
+from repro.core.trees import random_deep_ensemble
+
+# (n_trees, depth); the 512 x depth-8 point is the acceptance target
+SIZES_FAST = [(64, 8), (512, 8)]
+SIZES_FULL = [(64, 8), (512, 8), (1024, 8)]
+GATE_SIZE = (512, 8)
+MIN_SAVINGS = 0.30
+N_FEATURES = 32
+N_BINS = 256
+
+
+def _bits_equal(table, compressed, n_queries: int = 64) -> bool:
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, N_BINS, size=(n_queries, N_FEATURES)).astype(np.int32)
+    oracle = DeployConfig(table_dtype="int32")  # empty rows break packing
+    ref = np.asarray(XTimeEngine.from_config(table, oracle).raw_margin(q))
+    got = np.asarray(
+        XTimeEngine.from_config(compressed, DeployConfig()).raw_margin(q)
+    )
+    return bool(np.array_equal(got, ref))
+
+
+def run() -> list[dict]:
+    rows: list[dict] = []
+    for n_trees, depth in (SIZES_FAST if budget(0, 1) else SIZES_FULL):
+        ens = random_deep_ensemble(
+            n_trees=n_trees, depth=depth, n_features=N_FEATURES,
+            n_bins=N_BINS, p_dup=0.5, seed=20260808,
+        )
+        table = compile_ensemble(ens)
+        compressed, rep = compress_table(table, level="full")
+        if not _bits_equal(table, compressed):
+            raise AssertionError(
+                f"compressed table diverges from oracle at t{n_trees}_d{depth}"
+            )
+        us = time_call(
+            lambda t=table: compress_table(t, level="full"),
+            warmup=0, iters=budget(3, 1),
+        )
+        traffic = kernel_traffic_model(
+            batch=128, rows=compressed.n_rows, features=compressed.n_cols,
+            channels=compressed.n_outputs, table_dtype="uint8",
+            rows_saved=rep.rows_saved,
+            cols_saved=rep.cols_before - rep.cols_after,
+        )
+        rows.append({
+            "name": f"compress/t{n_trees}_d{depth}",
+            "us_per_call": us,
+            "derived": (
+                f"rows={rep.rows_before}->{rep.rows_after};"
+                f"savings={rep.row_savings_fraction:.3f};"
+                f"cols={rep.cols_before}->{rep.cols_after};"
+                f"merged={rep.merged_rows};bits_equal=True;"
+                f"uncompressed_ratio={traffic['uncompressed_ratio']:.2f}"
+            ),
+            "config": {"n_trees": n_trees, "depth": depth,
+                       "n_features": N_FEATURES, "level": "full"},
+        })
+        if (n_trees, depth) == GATE_SIZE:
+            if rep.row_savings_fraction < MIN_SAVINGS:
+                raise AssertionError(
+                    f"row savings {rep.row_savings_fraction:.3f} below the "
+                    f"{MIN_SAVINGS:.0%} acceptance floor at t{n_trees}_d{depth}"
+                )
+            rows.append({
+                # gate row: us_per_call IS the compressed row count —
+                # the baseline's tolerance_pct turns savings loss into
+                # a CI failure (see module docstring)
+                "name": f"rows_after_t{n_trees}_d{depth}",
+                "us_per_call": float(rep.rows_after),
+                "derived": (
+                    f"gate=rows_after;savings={rep.row_savings_fraction:.3f};"
+                    f"floor={MIN_SAVINGS}"
+                ),
+                "config": {"n_trees": n_trees, "depth": depth,
+                           "level": "full"},
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

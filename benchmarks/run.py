@@ -53,6 +53,7 @@ MODULE_NAMES = [
     "fig10_latency_throughput",
     "serve_bench",
     "ingest_bench",
+    "compress_bench",
 ]
 
 

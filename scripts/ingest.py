@@ -90,6 +90,10 @@ def main(argv: list[str] | None = None) -> int:
                          "instead of merging (merging loses bit-exactness)")
     ap.add_argument("--batching", action="store_true",
                     help="build the §III-D input-batching router program")
+    ap.add_argument("--compress", default="off", metavar="LEVEL",
+                    help="CAM table compression level (off/prune/merge/full/"
+                         "auto, default: %(default)s) — bit-equivalent row "
+                         "merging + pruning, see repro.core.compress")
     ap.add_argument("--expected", metavar="JSON",
                     help="golden reference {x, raw_margin, predict}; verify "
                          "the saved artifact serves it bit-exactly")
@@ -105,8 +109,9 @@ def main(argv: list[str] | None = None) -> int:
             deploy=DeployConfig(batching=args.batching),
             n_bins=args.n_bins,
             on_overflow="raise" if args.strict else "merge",
+            compress=args.compress,
         )
-    except IngestError as e:
+    except (IngestError, ValueError) as e:
         print(f"[ingest]  ERROR: {e}", file=sys.stderr)
         return 1
 
@@ -123,6 +128,13 @@ def main(argv: list[str] | None = None) -> int:
           f"remapped={rep.get('remapped_splits')})")
     for note in rep.get("notes", ()):
         print(f"[note]    {note}")
+    if artifact.compression is not None:
+        c = artifact.compression
+        print(f"[compress] level '{c['level']}': {c['rows_before']} -> "
+              f"{c['rows_after']} rows ({c['row_savings_fraction']:.0%} saved; "
+              f"pruned {c['pruned_empty'] + c['pruned_unreachable']}, "
+              f"merged {c['merged_rows']}, "
+              f"{c['cols_before'] - c['cols_after']} columns collapsed)")
     print(f"[place]   {artifact.placement.n_cores_used} cores, "
           f"replication x{artifact.placement.replication}, "
           f"NoC '{artifact.noc.config}', "

@@ -39,6 +39,7 @@ from repro.core.compile import (
     compile_ensemble,
     pack_cores,
 )
+from repro.core.compress import compress_table, resolve_level
 from repro.core.deploy import DeployConfig
 from repro.core.noc import NoCPlan, plan_noc
 from repro.core.perfmodel import PerfReport, xtime_perf
@@ -52,8 +53,13 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 # bounds) + the table_dtype key — a v1 reader would misread packed arrays
 # as canonical int32 exclusive-high, so packed artifacts must fail its
 # version gate cleanly.  v1 artifacts (int32, no table_dtype) still load.
-SCHEMA_VERSION = 2
-_SUPPORTED_SCHEMAS = (1, 2)
+# v3: column-collapsed tables carry a feature_ids array mapping stored
+# columns back to query features — a v2 reader would match misaligned
+# columns, so only artifacts that actually collapsed columns are stamped
+# v3 (everything else stays v2, and v1/v2 artifacts still load; the
+# 'compression' sidecar report alone is additive and needs no bump).
+SCHEMA_VERSION = 3
+_SUPPORTED_SCHEMAS = (1, 2, 3)
 _FORMAT = "xtime-compiled-model"
 
 # the CAMTable arrays stored in the .npz payload
@@ -90,6 +96,9 @@ class CompiledModel:
     # whose winner is already folded into ``deploy`` (see ``with_tuning``);
     # persisted in the sidecar so cold starts skip the re-search
     tuning: dict | None = None
+    # table-compression provenance: the ``CompressionReport`` dict of the
+    # pass that produced ``table`` (None when built with compress='off')
+    compression: dict | None = None
 
     def __post_init__(self) -> None:
         # per-instance engine cache (frozen dataclass => set via object)
@@ -114,6 +123,13 @@ class CompiledModel:
             raise ValueError(
                 "'batching' is fixed at build time; use "
                 "with_deploy(deploy.replace(batching=...)) to replan the NoC"
+            )
+        if "compress" in overrides:
+            # also build-time: the level describes how the TABLE was
+            # rewritten; binding cannot (de)compress an existing artifact
+            raise ValueError(
+                "'compress' is fixed at build time; re-run repro.api.build "
+                "with compress=... to change the table compression level"
             )
         cfg = self.deploy.replace(**overrides) if overrides else self.deploy
         if cfg.noc_config == "auto":
@@ -152,7 +168,13 @@ class CompiledModel:
         Only the cheap chip-side plans are recomputed, and only when
         ``batching`` changed (it alters the router program) — the CAM
         table and core placement are reused as-is, never recompiled.
+        ``deploy.compress`` is pinned to this artifact's actual level:
+        the table is already (un)compressed, so carrying a different
+        level over (registry hot swaps, config reuse) would only make
+        the provenance lie.
         """
+        if deploy.compress != self.deploy.compress:
+            deploy = deploy.replace(compress=self.deploy.compress)
         if deploy == self.deploy:
             return self
         if deploy.batching == self.deploy.batching:
@@ -210,6 +232,8 @@ class CompiledModel:
                 )
             arrays["low"] = t.low.astype(dt)
             arrays["high"] = (t.high - 1).astype(dt)
+        if t.feature_ids is not None:
+            arrays["feature_ids"] = np.asarray(t.feature_ids, dtype=np.int32)
         if self.quantizer is not None:
             # ragged per-feature edges stored flat + offsets
             edges = self.quantizer.edges
@@ -221,7 +245,11 @@ class CompiledModel:
         np.savez_compressed(_sibling(base, ".npz"), **arrays)
         sidecar = {
             "format": _FORMAT,
-            "schema_version": SCHEMA_VERSION,
+            # only column-collapsed tables NEED the v3 reader; everything
+            # else stays v2 so older readers keep loading it
+            "schema_version": (
+                SCHEMA_VERSION if t.feature_ids is not None else 2
+            ),
             "table": {k: getattr(t, k) for k in _TABLE_META},
             "chip": dataclasses.asdict(self.chip),
             "placement": {
@@ -240,6 +268,8 @@ class CompiledModel:
             sidecar["ingest"] = self.ingest
         if self.tuning is not None:
             sidecar["tuning"] = self.tuning
+        if self.compression is not None:
+            sidecar["compression"] = self.compression
         out = _sibling(base, ".json")
         out.write_text(json.dumps(sidecar, indent=1))
         return out
@@ -269,6 +299,8 @@ class CompiledModel:
                 # restore the canonical int32 exclusive-high form
                 arrays["low"] = arrays["low"].astype(np.int32)
                 arrays["high"] = arrays["high"].astype(np.int32) + 1
+            if "feature_ids" in npz:  # v3: column-collapsed table
+                arrays["feature_ids"] = npz["feature_ids"].astype(np.int32)
             quantizer = None
             if "quantizer" in sidecar and "q_offsets" in npz:
                 flat, off = npz["q_edges"], npz["q_offsets"]
@@ -290,6 +322,7 @@ class CompiledModel:
             deploy=deploy, quantizer=quantizer,
             ingest=sidecar.get("ingest"),
             tuning=sidecar.get("tuning"),
+            compression=sidecar.get("compression"),
         )
 
     # -- ingested-model serving ----------------------------------------------
@@ -315,6 +348,12 @@ class CompiledModel:
         return {
             "rows": self.table.n_rows,
             "features": self.table.n_features,
+            "columns": self.table.n_cols,
+            "compress": self.deploy.compress,
+            "rows_saved": (
+                0 if self.compression is None
+                else int(self.compression.get("rows_saved", 0))
+            ),
             "trees": self.table.n_trees,
             "outputs": self.table.n_outputs,
             "task": self.table.task,
@@ -350,25 +389,37 @@ def build(
     n_bins: int = 256,
     on_overflow: str = "merge",
     quantizer: FeatureQuantizer | None = None,
+    compress: str | None = None,
 ) -> CompiledModel:
     """Compile ``model`` into a portable, serializable ``CompiledModel``.
 
     The one-call replacement for the hand-wired ``compile_ensemble ->
-    pack_cores -> plan_noc -> xtime_perf -> XTimeEngine`` pipeline.
-    ``model`` may be a native ``Ensemble``, a pre-compiled ``CAMTable``,
-    an ``repro.ingest.ImportedEnsemble``, or a path to a serialized dump
-    (XGBoost JSON / LightGBM text / sklearn-forest dict) — the last two
-    run the ingestion frontend: the model is lowered onto an ``n_bins``
-    threshold grid built from its own split points (``on_overflow``
-    governs grids that don't fit) and the artifact carries the grid
-    (``CompiledModel.bin``) plus the lowering report in its sidecar.
+    compress_table -> pack_cores -> plan_noc -> xtime_perf ->
+    XTimeEngine`` pipeline.  ``model`` may be a native ``Ensemble``, a
+    pre-compiled ``CAMTable``, an ``repro.ingest.ImportedEnsemble``, or
+    a path to a serialized dump (XGBoost JSON / LightGBM text /
+    sklearn-forest dict) — the last two run the ingestion frontend: the
+    model is lowered onto an ``n_bins`` threshold grid built from its
+    own split points (``on_overflow`` governs grids that don't fit) and
+    the artifact carries the grid (``CompiledModel.bin``) plus the
+    lowering report in its sidecar.
 
     ``deploy.batching`` selects the §III-D input-batching router program;
     ``chip`` overrides the architecture constants (defaults to the
     paper's 4096-core chip); ``quantizer`` attaches a float->bin grid to
     a natively trained model's artifact.
+
+    ``compress`` (or ``deploy.compress``; the explicit argument wins)
+    runs the RETENTION-style compression pass between compile and
+    packing — 'prune'/'merge'/'full' or the 'auto' alias for 'full'
+    (``repro.core.compress``).  The grid-aware stages key off the
+    artifact's own quantizer (attached or ingested); placement, the NoC
+    plan and the perf report are all computed on the compressed shapes,
+    and the ``CompressionReport`` rides the sidecar.
     """
     deploy = deploy or DeployConfig()
+    level = resolve_level(deploy.compress if compress is None else compress)
+    deploy = deploy.replace(compress=level)
     ingest_report = None
     if not isinstance(model, (Ensemble, CAMTable)):
         # ingestion frontend, imported lazily: artifact load/serve paths
@@ -390,10 +441,14 @@ def build(
         table = model
     else:
         table = compile_ensemble(model)
+    compression = None
+    if level != "off":
+        table, creport = compress_table(table, quantizer, level=level)
+        compression = creport.to_dict()
     placement = pack_cores(table, chip)
     noc = plan_noc(table, placement, batching=deploy.batching)
     perf = xtime_perf(table, placement, noc)
     return CompiledModel(
         table=table, placement=placement, noc=noc, perf=perf, deploy=deploy,
-        quantizer=quantizer, ingest=ingest_report,
+        quantizer=quantizer, ingest=ingest_report, compression=compression,
     )

@@ -49,10 +49,18 @@ class CAMTable:
     path may stream instead (selected at compile time from ``n_bins``);
     the engine performs the actual packing (inclusive-high, narrow
     dtype) at bind time and the artifact stores the packed form at rest.
+
+    ``feature_ids`` is set by the compression pass when it physically
+    drops all-wildcard feature columns (``repro.core.compress``): it maps
+    each stored column back to the original query feature index, so the
+    engine selects ``q[:, feature_ids]`` before matching.  ``None`` means
+    the identity layout (every query feature has a column).
+    ``n_features`` always stays the LOGICAL query width; ``n_cols`` is
+    the physical table width.
     """
 
-    low: np.ndarray  # (R, F) int32, inclusive lower bin bound
-    high: np.ndarray  # (R, F) int32, exclusive upper bin bound
+    low: np.ndarray  # (R, n_cols) int32, inclusive lower bin bound
+    high: np.ndarray  # (R, n_cols) int32, exclusive upper bin bound
     leaf: np.ndarray  # (R,) float32 leaf value (logit / vote / mean)
     tree_id: np.ndarray  # (R,) int32
     class_id: np.ndarray  # (R,) int32, output channel of the leaf
@@ -65,10 +73,17 @@ class CAMTable:
     base_score: float
     n_classes: int
     table_dtype: str = "int32"  # packed kernel dtype (schema v1-additive)
+    feature_ids: np.ndarray | None = None  # (n_cols,) int32 (schema v3-additive)
 
     @property
     def n_rows(self) -> int:
         return int(self.low.shape[0])
+
+    @property
+    def n_cols(self) -> int:
+        """Physical feature-column count of the stored table (equals
+        ``n_features`` unless compression collapsed wildcard columns)."""
+        return int(self.low.shape[1])
 
     def dont_care_fraction(self) -> float:
         """Fraction of cells programmed to the full range (wildcards)."""
@@ -76,9 +91,10 @@ class CAMTable:
         return float(dc.mean())
 
     def feature_occupancy(self) -> np.ndarray:
-        """(F,) fraction of rows with a real (non-wildcard) range per
-        feature — how hard each queued-array column works
-        (``scripts/ingest.py`` prints the mean for ingested tables)."""
+        """(n_cols,) fraction of rows with a real (non-wildcard) range per
+        stored feature column — how hard each queued-array column works
+        (``scripts/ingest.py`` prints the mean for ingested tables; the
+        compression pass collapses columns where this is exactly 0)."""
         dc = (self.low == 0) & (self.high == self.n_bins)
         return 1.0 - dc.mean(axis=0)
 
@@ -348,7 +364,9 @@ def pack_cores(table: CAMTable, spec: ChipSpec | None = None) -> CorePlacement:
             "shard across chips (PCIe card scenario, §III-D)"
         )
 
-    n_seg = int(np.ceil(table.n_features / spec.array_cols))
+    # segmentation counts the PHYSICAL columns streamed into the queued
+    # arrays — collapsed wildcard columns cost no segment
+    n_seg = int(np.ceil(table.n_cols / spec.array_cols))
     replication = max(1, spec.n_cores // max(1, n_used))
     return CorePlacement(
         spec=spec,
@@ -367,8 +385,8 @@ def padded_table(
     """
     R = table.n_rows
     R_pad = int(np.ceil(R / row_multiple)) * row_multiple
-    low = np.ones((R_pad, table.n_features), dtype=np.int32)
-    high = np.zeros((R_pad, table.n_features), dtype=np.int32)
+    low = np.ones((R_pad, table.n_cols), dtype=np.int32)
+    high = np.zeros((R_pad, table.n_cols), dtype=np.int32)
     low[:R] = table.low
     high[:R] = table.high
     leaf_m = np.zeros((R_pad, table.n_outputs), dtype=np.float32)

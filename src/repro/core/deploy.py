@@ -26,6 +26,8 @@ NOC_CONFIGS = ("auto", "accumulate", "batch", "hybrid")
 SPMD_MODES = ("auto", "gspmd", "shard_map")
 TABLE_DTYPES = ("auto", "uint8", "uint16", "int32")
 FAITHFUL_MODES = ("msb_lsb", "two_cycle")  # bit-faithful aCAM arithmetic
+# table-compression levels (repro.core.compress): 'auto' == 'full'
+COMPRESS_LEVELS = ("off", "prune", "merge", "full", "auto")
 
 
 @dataclass(frozen=True)
@@ -63,6 +65,12 @@ class DeployConfig:
         interpreted elsewhere — callers no longer hard-code it.
       batching: chip-side input batching (§III-D Fig. 7c) — replicate a
         small model across core groups; feeds ``plan_noc`` at build time.
+      compress: RETENTION-style table compression level applied between
+        compile and packing ('off' | 'prune' | 'merge' | 'full', with
+        'auto' = 'full' — see ``repro.core.compress``).  Like
+        ``batching`` this is a BUILD-time knob: it rewrites the CAM
+        table itself, so it cannot be overridden at engine-bind time and
+        ``with_deploy`` pins it to what the artifact's table actually is.
     """
 
     backend: str = "jnp"
@@ -78,6 +86,7 @@ class DeployConfig:
     c_mult: int = 8
     interpret: bool | str = "auto"
     batching: bool = False
+    compress: str = "off"
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -106,6 +115,10 @@ class DeployConfig:
             raise ValueError("f_blk must be >= 1")
         if self.interpret not in (True, False, "auto"):
             raise ValueError("interpret must be True, False or 'auto'")
+        if self.compress not in COMPRESS_LEVELS:
+            raise ValueError(
+                f"compress {self.compress!r} not in {COMPRESS_LEVELS}"
+            )
 
     # -- derivation ----------------------------------------------------------
 

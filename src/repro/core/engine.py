@@ -173,6 +173,14 @@ class XTimeEngine:
 
         self.table = table
         self.config = config
+        # compressed tables may have dropped all-wildcard feature columns
+        # (repro.core.compress): queries arrive at the LOGICAL width and
+        # are narrowed to the stored columns before any padding/matching
+        self.feature_ids = (
+            None
+            if table.feature_ids is None
+            else np.asarray(table.feature_ids, dtype=np.int64)
+        )
         self.backend = config.backend
         if self.backend == "pallas" and not pallas_available():
             # jaxlib builds without the pallas TPU extension can't run the
@@ -406,11 +414,29 @@ class XTimeEngine:
         self._fn_cache[cache_key] = jfn
         return jfn
 
+    def select_features(self, q: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+        """Narrow ``(B, n_features)`` query bins to the stored table
+        columns — identity for uncompressed tables.  Queries already at
+        the physical width pass through, so the serving batcher can
+        narrow once per flush before bucket padding."""
+        q = jnp.asarray(q)
+        if self.feature_ids is None:
+            return q
+        if q.ndim == 2 and q.shape[1] == self.feature_ids.shape[0]:
+            return q
+        if q.ndim != 2 or q.shape[1] != self.table.n_features:
+            raise ValueError(
+                f"expected (_, {self.table.n_features}) query bins (or "
+                f"pre-selected (_, {self.feature_ids.shape[0]})), got "
+                f"{q.shape}"
+            )
+        return q[:, self.feature_ids]
+
     def _prep_queries(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
         # pad to a batch both the kernel tiling and the mesh sharding accept
         mult = int(np.lcm(self.b_blk, self.batch_multiple))
         q = kops.pad_queries(
-            jnp.asarray(q_bins), self.arrays.f_pad, b_blk=mult,
+            self.select_features(q_bins), self.arrays.f_pad, b_blk=mult,
             dtype=self.table_dtype,
         )
         if self.mesh is not None:

@@ -130,8 +130,10 @@ def xtime_perf(
     # --- latency of a single sample (unbatched) ---
     # input broadcast: feature vector streams down the H-tree; queued arrays
     # receive ceil(F/65) sequential segments (§III-C input segmentation).
+    # Physical columns only: compression-collapsed wildcard columns are
+    # never broadcast, so the latency/throughput respond to the rewrite.
     seg = placement.n_feature_segments
-    bcast_cycles = noc.n_levels + int(np.ceil(table.n_features / spec.flit_bytes))
+    bcast_cycles = noc.n_levels + int(np.ceil(table.n_cols / spec.flit_bytes))
     core_cycles = spec.lambda_core + spec.lambda_cam * max(0, seg - spec.n_queued) // spec.n_queued
     mmr_extra = max(0, placement.max_trees_per_core - 1)  # sequential leaf reads
     noc_up_cycles = noc.n_levels + int(np.ceil(noc.flits_per_sample_per_level[-1])) - 1
@@ -188,10 +190,17 @@ def kernel_traffic_model(
     channels: int,
     table_dtype: str = "int32",
     tile_skip_fraction: float = 0.0,
+    rows_saved: int = 0,
+    cols_saved: int = 0,
 ) -> dict:
     """Bytes one cam_match call streams through VMEM, and its arithmetic
     intensity — the roofline inputs the autotuner's candidates move.
 
+    ``rows``/``features`` are the COMPRESSED shapes actually streamed
+    (pass ``CAMTable.n_rows``/``CAMTable.n_cols``); ``rows_saved`` /
+    ``cols_saved`` carry what compression removed so the report can
+    price the rewrite (``uncompressed_ratio``: table traffic the naive
+    one-row-per-leaf layout would have streamed, relative to this one).
     ``table_dtype`` scales the threshold-table and query traffic (the low
     and high tables dominate: 2·R·F cells vs B·F queries).
     ``tile_skip_fraction`` discounts COMPARE OPS only: the v2 kernel's
@@ -210,6 +219,9 @@ def kernel_traffic_model(
     total = bytes_tables + bytes_queries + bytes_leaf + bytes_out
     compare_ops = 2.0 * batch * rows * features * live
     mac_ops = 2.0 * batch * rows * channels
+    naive_tables = (
+        2 * (rows + rows_saved) * (features + cols_saved) * itemsize
+    )
     return {
         "bytes_tables": bytes_tables,
         "bytes_queries": bytes_queries,
@@ -220,6 +232,7 @@ def kernel_traffic_model(
         "mac_ops": mac_ops,
         "intensity_ops_per_byte": (compare_ops + mac_ops) / max(1.0, total),
         "packed_ratio": 4.0 / itemsize,
+        "uncompressed_ratio": naive_tables / max(1, bytes_tables),
     }
 
 
@@ -245,7 +258,7 @@ def booster_perf(
     f_hz = spec.clock_ghz * 1e9
 
     traverse_cycles = node_cycles * depth
-    bcast_cycles = noc.n_levels + int(np.ceil(table.n_features / spec.flit_bytes))
+    bcast_cycles = noc.n_levels + int(np.ceil(table.n_cols / spec.flit_bytes))
     noc_up = noc.n_levels + int(np.ceil(noc.flits_per_sample_per_level[-1])) - 1
     lat_cycles = bcast_cycles + traverse_cycles + noc_up + noc.cp_ops_per_sample + 60
     tau_core = f_hz / traverse_cycles / 1e6  # 1/(4D) samples/clock

@@ -109,6 +109,15 @@ class FeatureQuantizer:
         """Number of distinct bins actually realizable for feature f."""
         return int(self.edges[f].shape[0]) + 1
 
+    def effective_bins_array(self) -> np.ndarray:
+        """(n_features,) realizable bin counts — ``transform`` can only
+        ever emit bins in ``[0, effective_bins(f) - 1]`` per feature, so
+        anything a CAM row constrains at or above that count is dead
+        weight the compression pass prunes/widens against this vector."""
+        return np.asarray(
+            [e.shape[0] + 1 for e in self.edges], dtype=np.int64
+        )
+
     def threshold_value(self, f: int, t: int) -> float:
         """Float-space threshold for split 'bin < t' (x < edges[t-1])."""
         return float(self.edges[f][t - 1])

@@ -541,3 +541,97 @@ def train_rf(
         leaf_class_mode=("leaf" if task != "regression" else "tree"),
         leaf_class=leaf_class,
     )
+
+
+# ---------------------------------------------------------------------------
+# Synthetic deep ensembles (compression workloads)
+# ---------------------------------------------------------------------------
+
+
+def random_deep_ensemble(
+    *,
+    n_trees: int = 8,
+    depth: int = 6,
+    n_features: int = 16,
+    n_bins: int = 256,
+    task: Task = "regression",
+    n_classes: int = 1,
+    p_dup: float = 0.5,
+    leaf_levels: int = 16,
+    base_score: float = 0.5,
+    seed: int = 0,
+) -> Ensemble:
+    """Random complete-depth ensemble shaped to exercise CAM compression.
+
+    The trainers (`train_gbdt`/`train_rf`) never emit the structures the
+    compression pass targets: their splits always partition live data, so
+    no path carries a contradictory duplicate split, and their leaf
+    values are distinct floats, so sibling leaves never compare equal.
+    This generator produces both, deliberately:
+
+      * with probability ``p_dup`` an internal node re-splits a feature
+        already split on its path, with a threshold drawn over the FULL
+        grid — thresholds outside the path's surviving ``[low, high)``
+        interval make one child's CAM row structurally empty (prunable),
+      * leaf values are drawn from the ``k/16`` grid (the paper-adjacent
+        quantized leaf payload), so sibling leaves frequently hold
+        bit-identical values and merge into their parent's interval.
+
+    ``k/16`` payloads also make every margin exact in float32 (dyadic
+    rationals, bounded magnitude), so any accumulation order yields the
+    same bits — the property the differential tests and benchmarks rely
+    on when comparing compressed against uncompressed tables at paper
+    scale.  Trees are complete (``2**depth`` leaves each): depth 8 gives
+    the paper's 256-leaf N_words bound exactly.
+    """
+    if depth < 1:
+        raise ValueError("depth must be >= 1")
+    if not 0.0 <= p_dup <= 1.0:
+        raise ValueError("p_dup must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    k_cls = n_classes if task == "multiclass" else (2 if task == "binary" else 1)
+    trees: list[Tree] = []
+    tree_class: list[int] = []
+    n_nodes = 2 ** (depth + 1) - 1
+    for i in range(n_trees):
+        feature = np.full(n_nodes, -1, dtype=np.int32)
+        threshold = np.zeros(n_nodes, dtype=np.int32)
+        left = np.full(n_nodes, -1, dtype=np.int32)
+        right = np.full(n_nodes, -1, dtype=np.int32)
+        value = np.zeros(n_nodes, dtype=np.float32)
+        next_free = 1
+        stack: list[tuple[int, int, tuple[int, ...]]] = [(0, 0, ())]
+        while stack:
+            j, d, path = stack.pop()
+            if d == depth:
+                value[j] = np.float32(
+                    int(rng.integers(-leaf_levels, leaf_levels + 1)) / 16.0
+                )
+                continue
+            if path and rng.random() < p_dup:
+                f = int(path[int(rng.integers(0, len(path)))])
+            else:
+                f = int(rng.integers(0, n_features))
+            threshold[j] = int(rng.integers(1, n_bins))
+            feature[j] = f
+            left[j] = next_free
+            right[j] = next_free + 1
+            stack.append((next_free, d + 1, path + (f,)))
+            stack.append((next_free + 1, d + 1, path + (f,)))
+            next_free += 2
+        trees.append(
+            Tree(feature=feature, threshold=threshold, left=left,
+                 right=right, value=value)
+        )
+        tree_class.append(i % k_cls if task == "multiclass" else 0)
+    return Ensemble(
+        trees=trees,
+        n_features=n_features,
+        n_bins=n_bins,
+        task=task,
+        kind="gbdt",
+        n_classes=k_cls,
+        tree_class=np.asarray(tree_class, dtype=np.int32),
+        base_score=float(base_score),
+        leaf_class_mode="tree",
+    )

@@ -116,7 +116,8 @@ class MicroBatcher:
     re-submitting out of order cannot mis-route rows.
     """
 
-    engine: "object"  # XTimeEngine (duck-typed: padded_fn/arrays/batch_multiple)
+    # XTimeEngine (duck-typed: padded_fn/arrays/batch_multiple/select_features)
+    engine: "object"
     bucket: BucketSpec = field(default_factory=BucketSpec)
     kind: str = "predict"
     _pending: list[PendingRequest] = field(default_factory=list)
@@ -189,8 +190,12 @@ class MicroBatcher:
         n = sum(p.n_rows for p in batch)
         size = self.bucket.select(n)
         q = np.concatenate([p.q_bins for p in batch], axis=0)
+        # compressed tables dropped wildcard columns: narrow the full-width
+        # request rows to the stored columns BEFORE padding to f_pad —
+        # padding first would bake misaligned columns into the bucket
+        q_sel = self.engine.select_features(jnp.asarray(q))
         q_padded = kops.pad_to_bucket(
-            jnp.asarray(q), size, self.engine.arrays.f_pad,
+            q_sel, size, self.engine.arrays.f_pad,
             dtype=self.engine.table_dtype,
         )
         out = np.asarray(self.engine.padded_fn(self.kind)(q_padded))

@@ -82,6 +82,16 @@ class ServedModel:
         None when the artifact was never autotuned."""
         return self.artifact.tuning
 
+    @property
+    def compression(self) -> dict | None:
+        """``CompressionReport`` dict of the pass that produced this
+        table (``repro.core.compress`` via ``build(compress=...)``);
+        None when the artifact was built with compress='off'.  Hot swaps
+        keep each artifact's own report — compression is baked into the
+        table, so ``with_deploy`` pins the carried-over ``compress``
+        knob to the incoming artifact's actual level."""
+        return self.artifact.compression
+
 
 class TableRegistry:
     """Compile/load, hold and hot-swap named models sharing one mesh."""

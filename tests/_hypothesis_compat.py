@@ -4,9 +4,15 @@ seeded-random fallback otherwise.
 ``hypothesis`` is a declared dev dependency (pyproject.toml), but the
 tier-1 suite must COLLECT and run in images that ship only the runtime
 stack.  The fallback implements exactly the subset this repo uses —
-``@given`` with ``st.integers`` keyword strategies and ``@settings`` —
-drawing ``max_examples`` samples from a fixed-seed Generator (no
-shrinking, no database; deterministic by construction).
+``@given`` with ``st.integers``/``st.builds`` keyword strategies and
+``@settings`` — drawing ``max_examples`` samples from a fixed-seed
+Generator (no shrinking, no database; deterministic by construction).
+
+``deep_ensemble_params()`` is the shared strategy over
+``repro.core.trees.random_deep_ensemble`` kwargs: deep complete trees
+with duplicate-split paths that trained boosters never emit, the
+adversarial population for the compression differential harness
+(tests/test_compress.py).
 """
 
 from __future__ import annotations
@@ -30,10 +36,24 @@ except ModuleNotFoundError:
         def draw(self, rng: "np.random.Generator") -> int:
             return int(rng.integers(self.min_value, self.max_value + 1))
 
+    class _BuildsStrategy:
+        """Mirrors ``st.builds``: draw each kwarg, call the target."""
+
+        def __init__(self, target, **kwargs) -> None:
+            self.target = target
+            self.kwargs = kwargs
+
+        def draw(self, rng: "np.random.Generator"):
+            return self.target(**{k: s.draw(rng) for k, s in self.kwargs.items()})
+
     class strategies:  # noqa: N801 - mirrors the hypothesis module name
         @staticmethod
         def integers(min_value: int, max_value: int) -> _IntStrategy:
             return _IntStrategy(min_value, max_value)
+
+        @staticmethod
+        def builds(target, **kwargs) -> _BuildsStrategy:
+            return _BuildsStrategy(target, **kwargs)
 
     def settings(*, max_examples: int = 20, **_ignored):
         """Records ``max_examples`` on the (possibly @given-wrapped) test."""
@@ -66,3 +86,30 @@ except ModuleNotFoundError:
             return wrapper
 
         return deco
+
+
+def deep_ensemble_params(
+    *,
+    max_trees: int = 10,
+    max_depth: int = 7,
+    max_features: int = 14,
+    max_classes: int = 1,
+):
+    """Strategy over ``random_deep_ensemble`` kwargs (as a plain dict).
+
+    ``p_dup`` is drawn as an integer percentage so the same strategy
+    works under real hypothesis and the integer-only fallback; callers
+    do ``kw = dict(params); kw["p_dup"] = kw.pop("p_dup_pct") / 100``.
+    Depth starts at 2 (depth-1 trees have no prefix to share) and
+    duplicate-split probability spans 0..100% so both clean and
+    pathological (empty-interval-heavy) tables appear.
+    """
+    return strategies.builds(
+        dict,
+        seed=strategies.integers(min_value=0, max_value=10_000),
+        n_trees=strategies.integers(min_value=1, max_value=max_trees),
+        depth=strategies.integers(min_value=2, max_value=max_depth),
+        n_features=strategies.integers(min_value=2, max_value=max_features),
+        p_dup_pct=strategies.integers(min_value=0, max_value=100),
+        n_classes=strategies.integers(min_value=1, max_value=max_classes),
+    )

@@ -58,6 +58,34 @@ def _rand_tree(rng: np.random.Generator, n_features: int, n_nodes: int,
     }
 
 
+def _deep_dup_tree(rng: np.random.Generator, n_features: int, depth: int) -> dict:
+    """Complete depth-``depth`` tree that re-splits a 2-feature subset with
+    quarter-grid thresholds — duplicate (often contradictory) splits on
+    every path — and k/16 leaf values, whose float32 sums are exact in any
+    accumulation order.  Trained boosters never emit these shapes; the
+    compression pass (repro.core.compress) exists for them, and the other
+    ``n_features - 2`` columns stay unsplit so column collapse fires too.
+    """
+    n_nodes = 2 ** (depth + 1) - 1
+    n_internal = 2**depth - 1
+    feature = np.full(n_nodes, -1, dtype=np.int64)
+    threshold = np.zeros(n_nodes)
+    left = np.full(n_nodes, -1, dtype=np.int64)
+    right = np.full(n_nodes, -1, dtype=np.int64)
+    value = np.zeros(n_nodes)
+    for j in range(n_internal):
+        feature[j] = int(rng.choice([0, 2]))
+        threshold[j] = float(rng.integers(-8, 9)) / 4.0
+        left[j] = 2 * j + 1
+        right[j] = 2 * j + 2
+    for j in range(n_internal, n_nodes):
+        value[j] = float(rng.integers(-16, 17)) / 16.0
+    return {
+        "feature": feature, "threshold": threshold,
+        "left": left, "right": right, "value": value,
+    }
+
+
 def _xgb_tree_json(t: dict, tree_id: int, n_features: int) -> dict:
     is_leaf = t["feature"] < 0
     n = len(t["feature"])
@@ -281,10 +309,19 @@ def main() -> None:
         "n_features": F, "n_classes": 1, "learning_rate": 0.1,
         "init": 2.125, "trees": sk_trees}, indent=1))
 
+    # 8. deep duplicate-split XGBoost regression: the compression fixture.
+    #    Own rng stream (and recorded last): the original fixtures' draws
+    #    — and thus their frozen files — stay byte-identical
+    rng_deep = np.random.default_rng(20260808)
+    trees = [_deep_dup_tree(rng_deep, F, depth=7) for _ in range(5)]
+    (HERE / "xgb_deep.json").write_text(json.dumps(
+        _xgb_doc(trees, objective="reg:squarederror", n_features=F,
+                 base_score=0.5), indent=1))
+
     print("fixtures:")
     for name in ("xgb_binary.json", "xgb_multi.json", "xgb_dart_reg.json",
                  "lgbm_binary.txt", "lgbm_multi.txt", "sk_rf_cls.json",
-                 "sk_gbdt_reg.json"):
+                 "sk_gbdt_reg.json", "xgb_deep.json"):
         _record(HERE / name, rng)
 
 

@@ -1,0 +1,427 @@
+"""RETENTION-style compression differential harness (DESIGN.md §11).
+
+The non-negotiable contract: ``compress_table`` output is BIT-EQUAL to
+the uncompressed int32 oracle for every query the engine can be handed —
+at every level, in every cell mode x table dtype the engine admits, under
+jit and under shard_map.  The test population is
+``random_deep_ensemble``: deep complete trees with duplicate-split paths
+(structurally empty boxes) and k/16-quantized leaves, whose float32 sums
+are exact in any accumulation order — so equality assertions stay
+``assert_array_equal`` even when compression changes row counts, padding
+and shard boundaries.
+
+Adversarial corners get their own tests: all-wildcard tables (column
+collapse), single-row tables, empty-interval rows (which break uint8
+packing until pruned), duplicate leaves (which must NOT merge), and
+grid-unreachable rows (prunable only under the artifact's quantizer).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from _hypothesis_compat import deep_ensemble_params, given, settings
+
+from repro.api import SCHEMA_VERSION, CompiledModel, build
+from repro.core.compile import CAMTable, compile_ensemble
+from repro.core.compress import (
+    COMPRESS_LEVELS,
+    CompressionReport,
+    compress_table,
+    resolve_level,
+)
+from repro.core.deploy import DeployConfig
+from repro.core.engine import XTimeEngine
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import random_deep_ensemble
+from repro.kernels import ops as kops
+from repro.serve.batching import MicroBatcher
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# the uncompressed oracle must run int32: duplicate-split ensembles emit
+# empty [low, high) boxes whose inclusive-high encoding (high - 1 = -1)
+# does not fit a packed dtype — one of the things compression fixes
+ORACLE = DeployConfig(table_dtype="int32")
+
+
+def _margins(table, config=ORACLE, q=None):
+    return np.asarray(XTimeEngine.from_config(table, config).raw_margin(q))
+
+
+def _queries(rng, n, n_features, n_bins):
+    q = rng.integers(0, n_bins, size=(n, n_features)).astype(np.int32)
+    q[: min(4, n)] = 0  # grid-boundary rows
+    q[min(4, n) : min(8, n)] = n_bins - 1
+    return q
+
+
+# -- property: every level bit-equals the uncompressed oracle ------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(params=deep_ensemble_params(max_trees=8, max_depth=6))
+def test_levels_bit_equal_oracle(params):
+    kw = dict(params)
+    kw["p_dup"] = kw.pop("p_dup_pct") / 100
+    kw.pop("n_classes")
+    ens = random_deep_ensemble(n_bins=256, **kw)
+    table = compile_ensemble(ens)
+    rng = np.random.default_rng(kw["seed"] + 1)
+    q = _queries(rng, 48, table.n_features, 256)
+    ref = _margins(table, q=q)
+    rows = {}
+    for level in ("prune", "merge", "full"):
+        ct, rep = compress_table(table, level=level)
+        rows[level] = ct.n_rows
+        assert rep.rows_after == ct.n_rows
+        assert rep.cols_after == ct.n_cols
+        np.testing.assert_array_equal(_margins(ct, q=q), ref)
+    # level monotonicity: each level only ever removes more rows
+    assert rows["full"] <= rows["merge"] <= rows["prune"] <= table.n_rows
+
+
+def test_multiclass_levels_bit_equal_oracle():
+    ens = random_deep_ensemble(
+        n_trees=9, depth=5, n_features=8, n_bins=256,
+        task="multiclass", n_classes=3, p_dup=0.5, seed=11,
+    )
+    table = compile_ensemble(ens)
+    q = _queries(np.random.default_rng(0), 32, 8, 256)
+    ref = _margins(table, q=q)
+    assert ref.shape[1] == 3
+    for level in ("prune", "merge", "full"):
+        ct, _ = compress_table(table, level=level)
+        np.testing.assert_array_equal(_margins(ct, q=q), ref)
+
+
+# -- every admissible cell mode x table dtype on the compressed table ----------
+
+
+@pytest.mark.parametrize(
+    "mode,dtype",
+    [
+        ("direct", "uint8"),
+        ("direct", "uint16"),
+        ("direct", "int32"),
+        ("inclusive", "uint8"),
+        ("inclusive", "uint16"),
+        ("inclusive", "int32"),
+        # faithful hardware modes pin int32 via 'auto' (kernel-v2 rule)
+        ("msb_lsb", "auto"),
+        ("two_cycle", "auto"),
+    ],
+)
+def test_compressed_bit_equal_across_modes_and_dtypes(mode, dtype):
+    ens = random_deep_ensemble(
+        n_trees=10, depth=6, n_features=12, n_bins=256, p_dup=0.55, seed=5,
+    )
+    table = compile_ensemble(ens)
+    ct, rep = compress_table(table, level="full")
+    assert rep.rows_saved > 0
+    q = _queries(np.random.default_rng(2), 64, 12, 256)
+    ref = _margins(table, q=q)
+    cfg = DeployConfig(mode=mode, table_dtype=dtype)
+    eng = XTimeEngine.from_config(ct, cfg)
+    if dtype == "auto":
+        assert eng.table_dtype == "int32"
+    # k/16 leaves: exact float32 sums, so even across row-count and
+    # padding changes the margins agree to the last bit
+    np.testing.assert_array_equal(np.asarray(eng.raw_margin(q)), ref)
+
+
+# -- shard_map: compressed vs uncompressed on the 8-device mesh ----------------
+
+_SHARD_CODE = """
+import json
+import numpy as np
+from repro.api import build
+from repro.core.trees import random_deep_ensemble
+from repro.launch.mesh import make_host_mesh
+
+ens = random_deep_ensemble(
+    n_trees=12, depth=6, n_features=16, n_bins=256, p_dup=0.5, seed=7,
+)
+rng = np.random.default_rng(1)
+q = rng.integers(0, 256, size=(128, 16)).astype(np.int32)
+cm0 = build(ens)                    # compress='off'
+cm1 = build(ens, compress="auto")
+ref = np.asarray(cm0.engine(table_dtype="int32").raw_margin(q))
+mesh = make_host_mesh()
+out = {"rows": [cm0.table.n_rows, cm1.table.n_rows]}
+for noc in ("accumulate", "hybrid"):
+    eng = cm1.engine(mesh=mesh, noc_config=noc)
+    m = np.asarray(eng.raw_margin(q))
+    out[noc] = {
+        "spmd": eng.spmd,
+        "bit_equal": bool(np.array_equal(m, ref)),
+        "max_err": float(np.abs(m - ref).max()),
+    }
+print(json.dumps(out))
+"""
+
+
+def test_compressed_bit_equal_under_shard_map():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARD_CODE], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    assert results["rows"][1] < results["rows"][0]
+    for noc in ("accumulate", "hybrid"):
+        res = results[noc]
+        assert res["spmd"] == "shard_map", (noc, res)
+        # k/16 leaves keep psum reductions exact: bit-equal, not allclose
+        assert res["bit_equal"], (noc, res)
+
+
+# -- adversarial corners -------------------------------------------------------
+
+
+def _manual_table(low, high, leaf, *, tree_id=None, n_bins=256, dtype="int32"):
+    low, high = np.asarray(low), np.asarray(high)
+    r, f = low.shape
+    return CAMTable(
+        low=np.asarray(low, np.int32), high=np.asarray(high, np.int32),
+        leaf=np.asarray(leaf, np.float32),
+        tree_id=np.asarray(
+            tree_id if tree_id is not None else np.zeros(r), np.int32
+        ),
+        class_id=np.zeros(r, dtype=np.int32),
+        n_trees=int(np.max(tree_id) + 1) if tree_id is not None else 1,
+        n_features=f, n_bins=n_bins, n_outputs=1,
+        task="regression", kind="gbdt", base_score=0.0, n_classes=1,
+        table_dtype=dtype,
+    )
+
+
+def test_all_wildcard_table_collapses_columns_keeps_rows():
+    r, f, B = 4, 6, 256
+    low = np.zeros((r, f)); high = np.full((r, f), B)
+    t = _manual_table(low, high, [0.25, 0.5, 0.75, 1.0],
+                      tree_id=np.arange(4))
+    ct, rep = compress_table(t, level="full")
+    # distinct trees: nothing merges; columns collapse to the 1-col floor
+    assert ct.n_rows == 4 and ct.n_cols == 1
+    assert rep.collapsed_columns == f - 1
+    assert ct.feature_ids is not None and ct.feature_ids.shape == (1,)
+    q = _queries(np.random.default_rng(0), 16, f, B)
+    np.testing.assert_array_equal(_margins(ct, q=q), _margins(t, q=q))
+
+
+def test_single_row_table_unchanged():
+    t = _manual_table([[3, 0]], [[9, 256]], [1.5])
+    for level in ("prune", "merge", "full"):
+        ct, rep = compress_table(t, level=level)
+        assert ct.n_rows == 1 and rep.rows_saved == 0
+        q = _queries(np.random.default_rng(0), 8, 2, 256)
+        np.testing.assert_array_equal(_margins(ct, q=q), _margins(t, q=q))
+
+
+def test_empty_interval_rows_pruned_and_packability_restored():
+    low = np.array([[5, 0], [7, 7], [0, 0]])   # row 1: empty; row 2 high=0
+    high = np.array([[9, 256], [7, 256], [256, 0]])
+    t = _manual_table(low, high, [0.5, 99.0, 99.0])
+    # uncompressed, the empty rows break the packed uint8 encoding
+    with pytest.raises(ValueError):
+        kops.pack_tables(
+            t.low, t.high, t.leaf[:, None], n_bins=256, dtype="uint8"
+        )
+    ct, rep = compress_table(t, level="prune")
+    assert rep.pruned_empty == 2 and ct.n_rows == 1
+    kops.pack_tables(
+        ct.low, ct.high, ct.leaf[:, None], n_bins=256, dtype="uint8"
+    )
+    q = _queries(np.random.default_rng(0), 16, 2, 256)
+    np.testing.assert_array_equal(_margins(ct, q=q), _margins(t, q=q))
+
+
+def test_fully_pruned_table_keeps_wildcard_sentinel():
+    t = _manual_table([[5, 5]], [[5, 256]], [42.0])  # single empty row
+    ct, rep = compress_table(t, level="full")
+    assert rep.sentinel_rows == 1 and ct.n_rows == 1
+    assert float(ct.leaf[0]) == 0.0
+    q = _queries(np.random.default_rng(0), 8, 2, 256)
+    np.testing.assert_array_equal(_margins(ct, q=q), _margins(t, q=q))
+
+
+def test_duplicate_identical_boxes_never_merge():
+    # same tree, same box, same leaf: each copy contributes its value
+    low = np.array([[4, 8], [4, 8]]); high = np.array([[10, 16], [10, 16]])
+    t = _manual_table(low, high, [0.5, 0.5])
+    ct, rep = compress_table(t, level="full")
+    assert ct.n_rows == 2 and rep.merged_rows == 0
+    q = np.array([[5, 9]], dtype=np.int32)
+    np.testing.assert_array_equal(_margins(ct, q=q), [[1.0]])
+
+
+def test_adjacent_same_leaf_rows_merge_but_different_leaves_do_not():
+    # rows 0/1: adjacent in feature 0, identical leaf bits -> fuse;
+    # rows 2/3: adjacent but different leaves -> must survive
+    low = np.array([[0, 8], [6, 8], [0, 2], [6, 2]])
+    high = np.array([[6, 16], [12, 16], [6, 8], [12, 8]])
+    t = _manual_table(low, high, [0.5, 0.5, 0.25, 0.75])
+    ct, rep = compress_table(t, level="merge")
+    assert rep.merged_rows == 1 and ct.n_rows == 3
+    q = _queries(np.random.default_rng(3), 64, 2, 256)
+    np.testing.assert_array_equal(_margins(ct, q=q), _margins(t, q=q))
+
+
+def test_cross_tree_adjacent_rows_never_merge():
+    low = np.array([[0, 0], [6, 0]]); high = np.array([[6, 256], [12, 256]])
+    t = _manual_table(low, high, [0.5, 0.5], tree_id=np.array([0, 1]))
+    ct, _ = compress_table(t, level="merge")
+    assert ct.n_rows == 2  # one query can match both: multiset would change
+
+
+def test_grid_unreachable_pruning_exact_for_realizable_queries():
+    # quantizer fit on 4 distinct values per feature: tiny effective grid
+    rng = np.random.default_rng(4)
+    x = rng.choice([0.1, 0.7, 1.3, 2.9], size=(64, 6))
+    grid = FeatureQuantizer.fit(x, n_bins=256)
+    ens = random_deep_ensemble(
+        n_trees=6, depth=5, n_features=6, n_bins=256, p_dup=0.4, seed=13,
+    )
+    table = compile_ensemble(ens)
+    ct, rep = compress_table(table, grid, level="full")
+    # thresholds live all over [1, 256) but only ~4 bins are realizable:
+    # the grid-aware stages must fire
+    assert rep.pruned_unreachable > 0
+    assert rep.widened_cells > 0
+    q = grid.transform(x)  # every grid-realizable query shape
+    np.testing.assert_array_equal(_margins(ct, q=q), _margins(table, q=q))
+
+
+def test_grid_feature_count_mismatch_rejected():
+    grid = FeatureQuantizer.fit(np.zeros((8, 3)), n_bins=256)
+    t = _manual_table([[0, 0]], [[256, 256]], [1.0])
+    with pytest.raises(ValueError, match="quantizer"):
+        compress_table(t, grid, level="prune")
+
+
+def test_compress_idempotent():
+    ens = random_deep_ensemble(
+        n_trees=8, depth=6, n_features=10, n_bins=256, p_dup=0.6, seed=9,
+    )
+    ct, rep = compress_table(compile_ensemble(ens), level="full")
+    ct2, rep2 = compress_table(ct, level="full")
+    assert rep2.rows_saved == 0
+    assert rep2.collapsed_columns == 0
+    assert ct2.n_rows == ct.n_rows and ct2.n_cols == ct.n_cols
+    q = _queries(np.random.default_rng(0), 32, 10, 256)
+    np.testing.assert_array_equal(_margins(ct2, q=q), _margins(ct, q=q))
+
+
+# -- report + level plumbing ---------------------------------------------------
+
+
+def test_report_arithmetic_and_roundtrip():
+    rep = CompressionReport(
+        level="full", rows_before=100, rows_after=40,
+        cols_before=8, cols_after=6, pruned_empty=50, merged_rows=10,
+        collapsed_columns=2,
+    )
+    assert rep.rows_saved == 60
+    assert rep.row_savings_fraction == 0.6
+    d = rep.to_dict()
+    assert d["rows_saved"] == 60 and d["row_savings_fraction"] == 0.6
+    # derived keys in the dict are ignored on the way back in
+    assert CompressionReport.from_dict(d) == rep
+    empty = CompressionReport(
+        level="off", rows_before=0, rows_after=0, cols_before=1, cols_after=1,
+    )
+    assert empty.row_savings_fraction == 0.0
+
+
+def test_resolve_level():
+    assert resolve_level("auto") == "full"
+    for lv in ("off", "prune", "merge", "full"):
+        assert resolve_level(lv) == lv
+    with pytest.raises(ValueError, match="compress level"):
+        resolve_level("max")
+    with pytest.raises(ValueError, match="compress"):
+        DeployConfig(compress="bogus")
+    assert DeployConfig().compress == "off"
+    assert set(COMPRESS_LEVELS) == {"off", "prune", "merge", "full", "auto"}
+
+
+def test_level_off_is_identity():
+    ens = random_deep_ensemble(n_trees=4, depth=4, n_features=6, seed=2)
+    table = compile_ensemble(ens)
+    ct, rep = compress_table(table, level="off")
+    assert ct is table and rep.rows_saved == 0
+
+
+# -- build() wiring, artifact roundtrip, serving -------------------------------
+
+
+def test_build_compress_wiring_and_summary():
+    ens = random_deep_ensemble(
+        n_trees=8, depth=6, n_features=10, n_bins=256, p_dup=0.5, seed=3,
+    )
+    cm = build(ens, compress="auto")
+    assert cm.deploy.compress == "full"  # resolved, not the alias
+    assert cm.compression is not None
+    assert cm.compression["rows_saved"] > 0
+    s = cm.summary()
+    assert s["compress"] == "full" and s["rows_saved"] > 0
+    assert s["columns"] == cm.table.n_cols
+    # compression is baked into the table: an engine-time override of the
+    # build-time knob must be rejected, like batching
+    with pytest.raises(ValueError, match="compress"):
+        cm.engine(compress="off")
+    # uncompressed build records nothing
+    cm0 = build(ens)
+    assert cm0.compression is None and cm0.deploy.compress == "off"
+
+
+def test_artifact_roundtrip_preserves_compression(tmp_path):
+    # many features, few used -> column collapse -> feature_ids -> v3
+    ens = random_deep_ensemble(n_trees=5, depth=4, n_features=24, seed=7)
+    cm = build(ens, compress="auto")
+    assert cm.table.feature_ids is not None
+    path = str(tmp_path / "m")
+    cm.save(path)
+    sidecar = json.loads((tmp_path / "m.json").read_text())
+    assert sidecar["schema_version"] == SCHEMA_VERSION
+    cm2 = CompiledModel.load(path)
+    np.testing.assert_array_equal(cm2.table.feature_ids, cm.table.feature_ids)
+    assert cm2.compression == cm.compression
+    q = _queries(np.random.default_rng(0), 32, 24, 256)
+    np.testing.assert_array_equal(
+        np.asarray(cm2.engine().raw_margin(q)),
+        np.asarray(cm.engine().raw_margin(q)),
+    )
+
+
+def test_uncollapsed_compressed_artifact_stays_schema_v2(tmp_path):
+    # prune-only: no feature_ids, so v2 readers still load the artifact
+    ens = random_deep_ensemble(n_trees=6, depth=5, n_features=8,
+                               p_dup=0.6, seed=4)
+    cm = build(ens, compress="prune")
+    assert cm.table.feature_ids is None and cm.compression is not None
+    path = str(tmp_path / "m")
+    cm.save(path)
+    assert json.loads((tmp_path / "m.json").read_text())["schema_version"] == 2
+
+
+def test_microbatcher_serves_compressed_engine_full_width_queries():
+    ens = random_deep_ensemble(n_trees=5, depth=4, n_features=24, seed=7)
+    cm = build(ens, compress="auto")
+    eng = cm.engine()
+    assert eng.feature_ids is not None  # collapsed: engine selects columns
+    q = _queries(np.random.default_rng(1), 10, 24, 256)
+    mb = MicroBatcher.for_engine(eng, kind="margin")
+    ids = [mb.submit(q[i : i + 2]) for i in range(0, 10, 2)]
+    out = mb.flush()
+    direct = np.asarray(eng.raw_margin(q))
+    got = np.concatenate([out[i] for i in ids], axis=0)
+    np.testing.assert_array_equal(got, direct)

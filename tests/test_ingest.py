@@ -96,6 +96,54 @@ def test_golden_engine_all_cell_modes(dump, mode):
     )
 
 
+@pytest.mark.parametrize("dump", DUMPS, ids=lambda p: p.name)
+def test_golden_compressed_build_matches_record(dump):
+    """``build(dump, compress='auto')`` serves the same answers as the
+    frozen float record: the pass runs grid-aware (the artifact's own
+    quantizer), so compression must be invisible on every golden fixture,
+    not just the deep one it exists for."""
+    exp = _expected(dump)
+    cm = build(str(dump), compress="auto")
+    assert cm.compression is not None
+    assert cm.deploy.compress == "full"
+    xb = cm.bin(exp["x"])
+    got_pred = np.asarray(cm.engine().predict(xb))
+    if cm.table.task == "regression":
+        np.testing.assert_allclose(got_pred, exp["predict"],
+                                   rtol=1e-5, atol=1e-6)
+    else:
+        np.testing.assert_array_equal(
+            np.asarray(got_pred, dtype=exp["predict"].dtype), exp["predict"]
+        )
+    np.testing.assert_allclose(
+        np.asarray(cm.engine().raw_margin(xb)), exp["raw_margin"],
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_deep_fixture_compresses_bit_exactly():
+    """The deep duplicate-split fixture is the compression showcase:
+    rows drop, and its k/16 leaves keep the engine margins bit-equal to
+    the float record (exact float32 sums — no allclose escape hatch)."""
+    dump = FIXTURES / "xgb_deep.json"
+    exp = _expected(dump)
+    cm = build(str(dump), compress="auto")
+    rep = cm.compression
+    assert rep["rows_saved"] > 0 and rep["rows_after"] < rep["rows_before"]
+    # only 2 of 5 features ever split: collapse must fire as well
+    assert rep["collapsed_columns"] >= 3
+    xb = cm.bin(exp["x"])
+    np.testing.assert_array_equal(
+        np.asarray(cm.engine().raw_margin(xb)), exp["raw_margin"]
+    )
+    # and against the uncompressed build of the same dump, bitwise
+    cm0 = build(str(dump))
+    np.testing.assert_array_equal(
+        np.asarray(cm.engine().raw_margin(xb)),
+        np.asarray(cm0.engine(table_dtype="int32").raw_margin(xb)),
+    )
+
+
 @pytest.mark.parametrize("dump", DUMPS[::3], ids=lambda p: p.name)
 def test_golden_save_load_serve_cold_start(dump, tmp_path):
     """dump -> build -> save -> load -> TableRegistry, no recompilation."""
