@@ -52,6 +52,7 @@ MODULE_NAMES = [
     "fig9b_defects",
     "fig10_latency_throughput",
     "serve_bench",
+    "serve_async_bench",
     "ingest_bench",
     "compress_bench",
 ]

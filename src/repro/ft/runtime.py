@@ -10,15 +10,24 @@ are integration-tested on CPU by injecting failures:
   * ``Heartbeat`` — per-worker liveness file with a monotonic counter;
     ``dead_workers`` flags anything past the timeout (the file protocol is
     what a real multi-host deployment would put on shared storage).
-  * ``StragglerMonitor`` — per-step wall-time EWMA; a step slower than
-    ``threshold`` x median flags the step.  The trainer's response is to
+  * ``StragglerMonitor`` — per-step wall-time outlier detector.  The
+    default baseline is a rolling-window median (training path); the
+    serving tier uses ``ewma_alpha`` for an O(1) EWMA baseline that
+    excludes flagged samples, so a persistently slow replica cannot
+    drag its own baseline up and hide.  The trainer's response is to
     record the event and (in the elastic driver) exclude the worker on
-    the next restart boundary; on TPU pods the equivalent production
+    the next restart boundary; the serving cluster
+    (``repro.serve.cluster``) excludes the replica from routing after
+    ``straggler_strikes`` flags — on TPU pods the equivalent production
     response is re-slicing.
   * ``FaultTolerantRunner`` — wraps a step function with periodic async
     checkpoints and replays from the latest checkpoint after a (simulated
     or real) crash; data is a pure function of step so the resumed loss
     trajectory is bit-identical (tested).
+
+Both ``Heartbeat`` and ``StragglerMonitor`` are shared with the serving
+path: ``repro.serve.cluster`` replicas beat the same liveness files and
+feed flush wall times into one shared EWMA monitor (DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -50,37 +59,88 @@ class Heartbeat:
             json.dump({"count": self._count, "time": time.time()}, f)
         os.replace(tmp, path)
 
-    def dead_workers(self) -> list[int]:
+    def last_seen(self) -> dict[int, float]:
+        """worker_id -> seconds since its last recorded beat.
+
+        Reads every worker file in the run dir (not just this worker's),
+        so any participant can observe the whole cluster; a file caught
+        mid-``os.replace`` or half-written by a dying process is skipped
+        rather than crashing the monitor.
+        """
         now = time.time()
-        dead = []
+        ages: dict[int, float] = {}
         for fn in os.listdir(self.dir):
-            if not fn.startswith("worker_"):
+            if not fn.startswith("worker_") or not fn.endswith(".json"):
                 continue
-            with open(os.path.join(self.dir, fn)) as f:
-                info = json.load(f)
-            if now - info["time"] > self.timeout_s:
-                dead.append(int(fn.split("_")[1].split(".")[0]))
-        return sorted(dead)
+            try:
+                with open(os.path.join(self.dir, fn)) as f:
+                    info = json.load(f)
+            except (OSError, ValueError):  # pragma: no cover - torn write
+                continue
+            ages[int(fn.split("_")[1].split(".")[0])] = now - info["time"]
+        return ages
+
+    def dead_workers(self) -> list[int]:
+        return sorted(
+            wid for wid, age in self.last_seen().items()
+            if age > self.timeout_s
+        )
 
 
 @dataclass
 class StragglerMonitor:
+    """Wall-time outlier detector with two baseline flavours.
+
+    ``ewma_alpha=None`` (default, training path): baseline is the median
+    of the last ``window`` samples.  ``ewma_alpha=a`` (serving path):
+    baseline is an exponentially-weighted moving average updated only
+    with UN-flagged samples, so a replica that turns slow keeps being
+    flagged instead of normalizing its own baseline.  Either way the
+    first ``min_samples`` observations are warmup and never flag.
+    """
+
     threshold: float = 3.0
     window: int = 32
+    ewma_alpha: float | None = None
+    min_samples: int = 8
     times: list[float] = field(default_factory=list)
     events: list[dict] = field(default_factory=list)
+    _ewma: float | None = None
+
+    @property
+    def baseline(self) -> float | None:
+        """Current comparison baseline (None during warmup)."""
+        if self.ewma_alpha is not None:
+            return self._ewma
+        hist = self.times[-self.window:]
+        return float(np.median(hist)) if hist else None
 
     def record(self, step: int, dt: float) -> bool:
         """Returns True if this step is flagged as a straggler."""
-        hist = self.times[-self.window:]
-        self.times.append(dt)
-        if len(hist) < 8:
+        if self.ewma_alpha is None:
+            hist = self.times[-self.window:]
+            self.times.append(dt)
+            if len(hist) < self.min_samples:
+                return False
+            med = float(np.median(hist))
+            if dt > self.threshold * med:
+                self.events.append({"step": step, "dt": dt, "median": med})
+                return True
             return False
-        med = float(np.median(hist))
-        if dt > self.threshold * med:
-            self.events.append({"step": step, "dt": dt, "median": med})
-            return True
-        return False
+        base = self._ewma
+        self.times.append(dt)
+        if base is None:
+            self._ewma = float(dt)
+            return False
+        flagged = (
+            len(self.times) >= self.min_samples and dt > self.threshold * base
+        )
+        if flagged:
+            self.events.append({"step": step, "dt": dt, "baseline": base})
+        else:
+            a = self.ewma_alpha
+            self._ewma = a * float(dt) + (1.0 - a) * base
+        return flagged
 
 
 class InjectedFailure(RuntimeError):

@@ -22,6 +22,7 @@ multi-chip placement rather than rejecting them (DESIGN.md §6).
 from __future__ import annotations
 
 import logging
+import threading
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
@@ -114,6 +115,13 @@ class MicroBatcher:
     The batcher owns ordering: requests are concatenated in arrival order
     and results are handed back keyed by request id, so interleaving or
     re-submitting out of order cannot mis-route rows.
+
+    Thread safety: ``submit``/``flush``/queue inspection may be called
+    from concurrent threads (the async cluster tier drives one batcher
+    from intake and worker threads at once).  The queue is mutated only
+    under ``_lock``; a flush atomically takes the whole pending list and
+    runs the engine OUTSIDE the lock, so submits keep landing while a
+    flush computes and two racing flushes serve disjoint batches.
     """
 
     # XTimeEngine (duck-typed: padded_fn/arrays/batch_multiple/select_features)
@@ -122,6 +130,9 @@ class MicroBatcher:
     kind: str = "predict"
     _pending: list[PendingRequest] = field(default_factory=list)
     _next_id: int = 0
+    _lock: threading.RLock = field(
+        default_factory=threading.RLock, repr=False, compare=False
+    )
 
     @classmethod
     def for_engine(cls, engine, *, max_batch: int = 1024, kind: str = "predict"):
@@ -156,24 +167,28 @@ class MicroBatcher:
             q = q[None, :]
         if q.ndim != 2 or q.shape[0] == 0:
             raise ValueError(f"expected (b, F) query rows, got shape {q.shape}")
-        if request_id is None:
-            request_id = self._next_id
-            self._next_id += 1
-        else:
-            self._next_id = max(self._next_id, request_id + 1)
-        self._pending.append(PendingRequest(request_id, q, t_enqueue))
+        with self._lock:
+            if request_id is None:
+                request_id = self._next_id
+                self._next_id += 1
+            else:
+                self._next_id = max(self._next_id, request_id + 1)
+            self._pending.append(PendingRequest(request_id, q, t_enqueue))
         return request_id
 
     @property
     def pending_rows(self) -> int:
-        return sum(p.n_rows for p in self._pending)
+        with self._lock:
+            return sum(p.n_rows for p in self._pending)
 
     @property
     def pending_requests(self) -> int:
-        return len(self._pending)
+        with self._lock:
+            return len(self._pending)
 
     def oldest_enqueue_time(self) -> float | None:
-        return self._pending[0].t_enqueue if self._pending else None
+        with self._lock:
+            return self._pending[0].t_enqueue if self._pending else None
 
     # -- flush ---------------------------------------------------------------
 
@@ -184,9 +199,10 @@ class MicroBatcher:
         ``engine.predict``/``raw_margin`` call on that request would give
         (the correctness contract tested in tests/test_serving.py).
         """
-        if not self._pending:
-            return {}
-        batch, self._pending = self._pending, []
+        with self._lock:
+            if not self._pending:
+                return {}
+            batch, self._pending = self._pending, []
         n = sum(p.n_rows for p in batch)
         size = self.bucket.select(n)
         q = np.concatenate([p.q_bins for p in batch], axis=0)

@@ -16,8 +16,11 @@ JAX path can be sanity-checked against the paper's chip model
 (DESIGN.md §6).
 
 The loop is deliberately synchronous — single-threaded, deterministic,
-testable; the async/multi-host variants planned in ROADMAP.md layer on
-top of exactly this flush discipline.
+testable.  The async production tier exists: ``repro.serve.cluster``
+layers concurrent intake, adaptive flush deadlines, admission control
+and replicated failover on exactly this flush discipline, and this loop
+is the ORACLE it is bit-equality-tested against on identical request
+streams (tests/test_cluster.py, DESIGN.md §12).
 """
 
 from __future__ import annotations

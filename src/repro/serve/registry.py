@@ -17,15 +17,24 @@ dtype come from the persisted plan, no re-search on reload.
 
 Hot swap: re-registering a name atomically replaces its engine and bumps
 the version; in-flight flushes keep the old engine object (Python
-reference semantics) and the next flush picks up the new table — no
-draining or locking needed in the synchronous loop.  Serving settings
-(``batching``, deploy overrides) carry over across swaps unless
+reference semantics) and the next flush picks up the new table.  Serving
+settings (``batching``, deploy overrides) carry over across swaps unless
 explicitly overridden, so a swap changes the TABLE, not the
 configuration.
+
+Thread safety: every registry operation (register/swap/unregister and
+all lookups) runs under one re-entrant lock, so the async cluster tier
+(``repro.serve.cluster``) can hot-swap from a control thread while
+worker threads resolve entries — a reader sees either the old or the
+new ``ServedModel``, never a torn one.  ``register`` holds the lock
+across its read-modify-write (version bump + settings carry-over), which
+serializes concurrent swaps of the same name; compiles are slow but
+swaps are rare, so serialization beats a torn version chain.
 """
 
 from __future__ import annotations
 
+import threading
 import warnings
 from dataclasses import dataclass, field
 
@@ -116,6 +125,7 @@ class TableRegistry:
         self.chip_spec = chip_spec
         self.deploy = deploy  # None => per-model defaults / artifact config
         self._models: dict[str, ServedModel] = {}
+        self._lock = threading.RLock()
 
     # -- registration --------------------------------------------------------
 
@@ -149,6 +159,21 @@ class TableRegistry:
                 DeprecationWarning,
                 stacklevel=2,
             )
+        with self._lock:
+            return self._register_locked(
+                name, model, batching=batching, deploy=deploy,
+                **engine_overrides,
+            )
+
+    def _register_locked(
+        self,
+        name: str,
+        model: Ensemble | CAMTable | CompiledModel,
+        *,
+        batching: bool | None = None,
+        deploy: DeployConfig | None = None,
+        **engine_overrides,
+    ) -> ServedModel:
         prev = self._models.get(name)
         if prev is not None and deploy is None:
             # carry the previous loose overrides forward — but an explicit
@@ -190,27 +215,30 @@ class TableRegistry:
         self, name: str, model: Ensemble | CAMTable | CompiledModel, **kw
     ) -> ServedModel:
         """Hot-swap: like ``register`` but the name must already exist."""
-        if name not in self._models:
-            raise KeyError(f"cannot swap unknown model {name!r}")
-        return self.register(name, model, **kw)
+        with self._lock:
+            if name not in self._models:
+                raise KeyError(f"cannot swap unknown model {name!r}")
+            return self._register_locked(name, model, **kw)
 
     def unregister(self, name: str) -> None:
-        try:
-            del self._models[name]
-        except KeyError:
-            raise KeyError(
-                f"unknown model {name!r}; registered: {sorted(self._models)}"
-            ) from None
+        with self._lock:
+            try:
+                del self._models[name]
+            except KeyError:
+                raise KeyError(
+                    f"unknown model {name!r}; registered: {sorted(self._models)}"
+                ) from None
 
     # -- lookup --------------------------------------------------------------
 
     def get(self, name: str) -> ServedModel:
-        try:
-            return self._models[name]
-        except KeyError:
-            raise KeyError(
-                f"unknown model {name!r}; registered: {sorted(self._models)}"
-            ) from None
+        with self._lock:
+            try:
+                return self._models[name]
+            except KeyError:
+                raise KeyError(
+                    f"unknown model {name!r}; registered: {sorted(self._models)}"
+                ) from None
 
     def engine(self, name: str) -> XTimeEngine:
         return self.get(name).engine
@@ -220,14 +248,18 @@ class TableRegistry:
 
     def version(self, name: str) -> int:
         """Current version of ``name`` (0 if never registered)."""
-        entry = self._models.get(name)
-        return entry.version if entry is not None else 0
+        with self._lock:
+            entry = self._models.get(name)
+            return entry.version if entry is not None else 0
 
     def names(self) -> list[str]:
-        return sorted(self._models)
+        with self._lock:
+            return sorted(self._models)
 
     def __contains__(self, name: str) -> bool:
-        return name in self._models
+        with self._lock:
+            return name in self._models
 
     def __len__(self) -> int:
-        return len(self._models)
+        with self._lock:
+            return len(self._models)
