@@ -10,7 +10,12 @@ table dtypes on the platform the bench runs on:
     traffic for identical bits;
   * ``v2_pallas``  — the tiled v2 Pallas kernel on uint8 tables with the
     wildcard tile mask (interpret mode off-TPU, so its timing is only
-    meaningful on TPU; kept small and recorded for trend, not gated).
+    meaningful on TPU; kept small and recorded for trend, not gated);
+  * ``v3_dispatch`` — what the kernel-v3 measured-cost dispatch table
+    (``repro.core.tune.TunePlan.dispatch``) binds at each size: the
+    faster of the v1/v2 candidates above.  This is the gated row — the
+    crossover is shape-dependent (v2 loses at b256/r4096/f32, wins at
+    r16384/f130), and dispatch must never be slower than v1.
 
 Every row's ``derived`` carries the traffic-model numbers
 (``repro.core.perfmodel.kernel_traffic_model``) plus, for packed rows,
@@ -26,6 +31,7 @@ import numpy as np
 
 from benchmarks.common import budget, time_call
 from repro.core.perfmodel import kernel_traffic_model
+from repro.core.tune import kernel_version
 from repro.kernels import ops as kops
 from repro.kernels.ref import cam_match_ref
 
@@ -101,6 +107,24 @@ def run() -> list[dict]:
                 f"packed_ratio={t8['packed_ratio']:.1f}"
             ),
             "config": {**cfg, "table_dtype": "uint8", "mode": "inclusive"},
+        })
+        # the kernel-v3 dispatch outcome on these measurements: the
+        # per-bucket winner a TunePlan.dispatch entry would record
+        chosen_dtype = "int32" if us32 <= us8 else "uint8"
+        us_d = min(us32, us8)
+        rows.append({
+            "name": f"kernel/v3_dispatch_b{b}_r{r}_f{f}",
+            "us_per_call": us_d,
+            "derived": (
+                f"chosen={kernel_version(chosen_dtype)}_{chosen_dtype};"
+                f"v1_us={us32:.0f};v2_us={us8:.0f};"
+                f"win_vs_v1={us32 / us_d:.2f}"
+            ),
+            "config": {
+                **cfg, "table_dtype": chosen_dtype,
+                "mode": "direct" if chosen_dtype == "int32" else "inclusive",
+                "kernel": kernel_version(chosen_dtype),
+            },
         })
 
     # small tiled-Pallas spot row: wildcard-mask + scratch accumulation

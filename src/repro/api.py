@@ -37,6 +37,7 @@ from repro.core.compile import (
     ChipSpec,
     CorePlacement,
     compile_ensemble,
+    order_columns_by_activity,
     pack_cores,
 )
 from repro.core.compress import compress_table, resolve_level
@@ -54,10 +55,12 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 # as canonical int32 exclusive-high, so packed artifacts must fail its
 # version gate cleanly.  v1 artifacts (int32, no table_dtype) still load.
 # v3: column-collapsed tables carry a feature_ids array mapping stored
-# columns back to query features — a v2 reader would match misaligned
-# columns, so only artifacts that actually collapsed columns are stamped
-# v3 (everything else stays v2, and v1/v2 artifacts still load; the
-# 'compression' sidecar report alone is additive and needs no bump).
+# columns back to query features, and column-clustered tables carry a
+# col_perm array (order_columns_by_activity) — a v2 reader would match
+# misaligned columns either way, so only artifacts whose columns were
+# actually collapsed or permuted are stamped v3 (everything else stays
+# v2, and v1/v2 artifacts still load; the 'compression' sidecar report
+# alone is additive and needs no bump).
 SCHEMA_VERSION = 3
 _SUPPORTED_SCHEMAS = (1, 2, 3)
 _FORMAT = "xtime-compiled-model"
@@ -110,12 +113,18 @@ class CompiledModel:
 
     # -- execution binding ---------------------------------------------------
 
-    def resolved_deploy(self, mesh=None, **overrides) -> DeployConfig:
-        """The effective config an engine binds: ``overrides`` applied, then
-        'auto' noc_config resolved from the compiled NoC plan ('batch'
-        degrades to 'accumulate' without a mesh to replicate over) and
-        'auto' spmd resolved from the mesh (explicit shard_map collectives
-        on a mesh, plain jit otherwise — DESIGN.md §8)."""
+    def resolved_deploy(
+        self, mesh=None, batch_hint=None, **overrides
+    ) -> DeployConfig:
+        """The effective config an engine binds: the tuned dispatch entry
+        for ``batch_hint`` folded in first (tuned artifacts only — the
+        ``TunePlan.dispatch`` table picks the measured-best kernel version
+        and block sizes for that serving bucket), then ``overrides``
+        (explicit knobs outrank the dispatch), then 'auto' noc_config
+        resolved from the compiled NoC plan ('batch' degrades to
+        'accumulate' without a mesh to replicate over) and 'auto' spmd
+        resolved from the mesh (explicit shard_map collectives on a mesh,
+        plain jit otherwise — DESIGN.md §8)."""
         if "batching" in overrides:
             # a build-time knob: it changes the router program, not the
             # engine binding — silently ignoring it here would serve the
@@ -131,7 +140,11 @@ class CompiledModel:
                 "'compress' is fixed at build time; re-run repro.api.build "
                 "with compress=... to change the table compression level"
             )
-        cfg = self.deploy.replace(**overrides) if overrides else self.deploy
+        cfg = self.deploy
+        if batch_hint is not None and self.tuning is not None:
+            cfg = self.tune_plan().apply(cfg, batch=int(batch_hint))
+        if overrides:
+            cfg = cfg.replace(**overrides)
         if cfg.noc_config == "auto":
             noc_cfg = self.noc.engine_noc_config
             if noc_cfg == "batch" and mesh is None:
@@ -141,15 +154,24 @@ class CompiledModel:
             cfg = cfg.replace(spmd="gspmd" if mesh is None else "shard_map")
         return cfg
 
-    def engine(self, mesh=None, **overrides) -> "XTimeEngine":
+    def engine(self, mesh=None, batch_hint=None, **overrides) -> "XTimeEngine":
         """Lazily bind this artifact to an ``XTimeEngine``.
 
         Repeated calls with the same mesh/overrides return the same engine
         (and therefore hit its jit cache); a different mesh or override set
         binds a fresh one.  ``overrides`` are ``DeployConfig`` field
         updates (e.g. ``backend='pallas'``, ``b_blk=256``).
+
+        ``batch_hint`` engages a tuned artifact's DISPATCH table: the
+        engine binds the measured-best kernel version/blocks for that
+        serving batch's bucket (``TunePlan.dispatch_for``).  Hints
+        resolving to the same bucket share one engine; untuned artifacts
+        ignore the hint.
         """
-        key = (None if mesh is None else id(mesh),
+        bucket = None
+        if batch_hint is not None and self.tuning is not None:
+            bucket = int(self.tune_plan().dispatch_for(int(batch_hint))["batch"])
+        key = (None if mesh is None else id(mesh), bucket,
                tuple(sorted(overrides.items())))
         cached = self._engines.get(key)
         if cached is not None:
@@ -157,7 +179,9 @@ class CompiledModel:
         from repro.core.engine import XTimeEngine  # lazy: touches jax
 
         eng = XTimeEngine.from_config(
-            self.table, self.resolved_deploy(mesh, **overrides), mesh=mesh
+            self.table,
+            self.resolved_deploy(mesh, batch_hint=batch_hint, **overrides),
+            mesh=mesh,
         )
         self._engines[key] = eng
         return eng
@@ -234,6 +258,8 @@ class CompiledModel:
             arrays["high"] = (t.high - 1).astype(dt)
         if t.feature_ids is not None:
             arrays["feature_ids"] = np.asarray(t.feature_ids, dtype=np.int32)
+        if t.col_perm is not None:
+            arrays["col_perm"] = np.asarray(t.col_perm, dtype=np.int32)
         if self.quantizer is not None:
             # ragged per-feature edges stored flat + offsets
             edges = self.quantizer.edges
@@ -245,10 +271,13 @@ class CompiledModel:
         np.savez_compressed(_sibling(base, ".npz"), **arrays)
         sidecar = {
             "format": _FORMAT,
-            # only column-collapsed tables NEED the v3 reader; everything
-            # else stays v2 so older readers keep loading it
+            # only column-collapsed or column-permuted tables NEED the v3
+            # reader; everything else stays v2 so older readers keep
+            # loading it
             "schema_version": (
-                SCHEMA_VERSION if t.feature_ids is not None else 2
+                SCHEMA_VERSION
+                if (t.feature_ids is not None or t.col_perm is not None)
+                else 2
             ),
             "table": {k: getattr(t, k) for k in _TABLE_META},
             "chip": dataclasses.asdict(self.chip),
@@ -301,6 +330,8 @@ class CompiledModel:
                 arrays["high"] = arrays["high"].astype(np.int32) + 1
             if "feature_ids" in npz:  # v3: column-collapsed table
                 arrays["feature_ids"] = npz["feature_ids"].astype(np.int32)
+            if "col_perm" in npz:  # v3: column-clustered table
+                arrays["col_perm"] = npz["col_perm"].astype(np.int32)
             quantizer = None
             if "quantizer" in sidecar and "q_offsets" in npz:
                 flat, off = npz["q_edges"], npz["q_offsets"]
@@ -390,6 +421,7 @@ def build(
     on_overflow: str = "merge",
     quantizer: FeatureQuantizer | None = None,
     compress: str | None = None,
+    cluster_columns: bool = False,
 ) -> CompiledModel:
     """Compile ``model`` into a portable, serializable ``CompiledModel``.
 
@@ -416,6 +448,12 @@ def build(
     artifact's own quantizer (attached or ingested); placement, the NoC
     plan and the perf report are all computed on the compressed shapes,
     and the ``CompressionReport`` rides the sidecar.
+
+    ``cluster_columns`` runs the kernel-v3 column clustering AFTER
+    compression (``order_columns_by_activity``): all-wildcard feature
+    columns move into trailing tiles so the kernel's wildcard tile mask
+    skips them, with the permutation recorded on ``CAMTable.col_perm``
+    (schema v3) and queries permuted to match at engine bind.
     """
     deploy = deploy or DeployConfig()
     level = resolve_level(deploy.compress if compress is None else compress)
@@ -445,6 +483,8 @@ def build(
     if level != "off":
         table, creport = compress_table(table, quantizer, level=level)
         compression = creport.to_dict()
+    if cluster_columns:
+        table = order_columns_by_activity(table, f_blk=deploy.f_blk)
     placement = pack_cores(table, chip)
     noc = plan_noc(table, placement, batching=deploy.batching)
     perf = xtime_perf(table, placement, noc)

@@ -57,6 +57,15 @@ class CAMTable:
     the identity layout (every query feature has a column).
     ``n_features`` always stays the LOGICAL query width; ``n_cols`` is
     the physical table width.
+
+    ``col_perm`` records the compile-time column clustering
+    (``order_columns_by_activity``): stored column ``j`` holds what the
+    pre-clustering layout held at column ``col_perm[j]``, so the engine
+    permutes selected queries with ``q[:, col_perm]`` before matching.
+    It is a PURE permutation (width-preserving), which is exactly why it
+    cannot ride ``feature_ids``: the engine's pass-through shortcut for
+    pre-narrowed queries keys off the width change, and a permutation
+    has none.  ``None`` means original column order.
     """
 
     low: np.ndarray  # (R, n_cols) int32, inclusive lower bin bound
@@ -74,6 +83,7 @@ class CAMTable:
     n_classes: int
     table_dtype: str = "int32"  # packed kernel dtype (schema v1-additive)
     feature_ids: np.ndarray | None = None  # (n_cols,) int32 (schema v3-additive)
+    col_perm: np.ndarray | None = None  # (n_cols,) int32 (schema v3-additive)
 
     @property
     def n_rows(self) -> int:
@@ -110,6 +120,15 @@ class CAMTable:
         padded = np.zeros((R, nf * f_blk), dtype=bool)
         padded[:, :F] = act
         return padded.reshape(R, nf, f_blk).any(axis=-1)
+
+    def packed_row_activity(self, f_blk: int) -> np.ndarray:
+        """(R, ceil(T/8)) uint8 — each row's feature-tile activity bitmask,
+        bit-packed big-endian (tile 0 is the MSB of byte 0).  One byte per
+        8 feature tiles instead of one bool per tile; byte-lexicographic
+        order equals the numeric order of the unpacked bitmask, so this is
+        the sort key behind the wildcard row clustering at any tile count.
+        """
+        return np.packbits(self.row_tile_activity(f_blk), axis=1)
 
     def tile_activity(self, r_blk: int, f_blk: int) -> np.ndarray:
         """(ceil(R/r_blk), ceil(F/f_blk)) bool — does any cell of the tile
@@ -185,16 +204,47 @@ def order_rows_by_wildcards(table: CAMTable, f_blk: int = 128) -> CAMTable:
     no-ops for the v2 kernel.  Stable sort: rows with identical
     activity keep their tree-traversal order.
     """
-    tile_act = table.row_tile_activity(f_blk)  # (R, T)
-    n_tiles = tile_act.shape[1]
-    # pack each row's tile bitmask into one integer sort key (T <= 63 for
-    # any realistic F; fall back to lexsort above that)
-    if n_tiles < 63:
-        key = (tile_act << np.arange(n_tiles - 1, -1, -1)).sum(axis=1)
-        perm = np.argsort(key, kind="stable")
-    else:  # pragma: no cover - >8k features
-        perm = np.lexsort(tile_act.T[::-1])
+    # bit-packed per-row activity masks: byte-lexicographic order equals
+    # the numeric order of the full bitmask (tile 0 = MSB), at any tile
+    # count — no <63-tile integer-key special case.  lexsort's last key
+    # is primary, so feed the bytes most-significant-last; it is stable,
+    # so rows with identical activity keep their tree-traversal order.
+    packed = table.packed_row_activity(f_blk)  # (R, ceil(T/8)) uint8
+    perm = np.lexsort(packed.T[::-1])
     return table.permuted(perm)
+
+
+def order_columns_by_activity(table: CAMTable, f_blk: int = 128) -> CAMTable:
+    """Cluster feature COLUMNS so all-wildcard features cost zero matches.
+
+    Compression may leave (and uncompressed tables always have) columns
+    that no row constrains — every cell is the full range, so they match
+    any query.  Scattered among active columns they poison their
+    ``f_blk``-wide tiles; moved together at the tail they join the
+    always-match column padding and their tiles drop out of the kernel's
+    wildcard tile mask entirely.  Stable partition: active columns keep
+    their original relative order, so partially-active tiles stay as
+    clustered as the original layout had them.
+
+    The permutation is recorded on ``CAMTable.col_perm`` (composed with
+    any existing one) and the row clustering re-runs on the new layout —
+    both are semantics-free given the engine permutes queries to match
+    (``XTimeEngine.select_features``).  Identity permutations return the
+    table unchanged (no ``col_perm``, artifact schema stays put).
+    """
+    active = table.feature_occupancy() > 0.0
+    perm = np.argsort(~active, kind="stable").astype(np.int32)
+    if np.array_equal(perm, np.arange(table.n_cols, dtype=np.int32)):
+        return table  # nothing to move; don't stamp a trivial col_perm
+    prev = table.col_perm
+    combined = perm if prev is None else np.asarray(prev, np.int32)[perm]
+    out = replace(
+        table,
+        low=table.low[:, perm],
+        high=table.high[:, perm],
+        col_perm=combined,
+    )
+    return order_rows_by_wildcards(out, f_blk)
 
 
 def compile_ensemble(
@@ -202,6 +252,7 @@ def compile_ensemble(
     *,
     table_dtype: str = "auto",
     order_rows: bool = True,
+    cluster_columns: bool = False,
 ) -> CAMTable:
     """Traverse every tree, emit one CAM row per leaf.
 
@@ -209,6 +260,11 @@ def compile_ensemble(
     grid permits (``select_table_dtype``); pass ``'int32'`` to pin the
     v1 wide layout.  ``order_rows`` applies the wildcard-aware row
     clustering (row order never affects results — see ``permuted``).
+    ``cluster_columns`` additionally runs ``order_columns_by_activity``,
+    recording the column permutation on the table (``col_perm``) so the
+    engine permutes queries to match; off by default because it bumps
+    the artifact schema to v3 and only pays off when all-wildcard
+    feature columns exist.
     """
     if table_dtype == "auto":
         table_dtype = select_table_dtype(ens.n_bins)
@@ -268,7 +324,11 @@ def compile_ensemble(
         n_classes=ens.n_classes,
         table_dtype=table_dtype,
     )
-    return order_rows_by_wildcards(table) if order_rows else table
+    if order_rows:
+        table = order_rows_by_wildcards(table)
+    if cluster_columns:
+        table = order_columns_by_activity(table)
+    return table
 
 
 # ---------------------------------------------------------------------------

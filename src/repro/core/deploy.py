@@ -63,6 +63,13 @@ class DeployConfig:
       interpret: run the Pallas kernel in interpret mode.  'auto'
         (default) resolves at engine-bind time: compiled on TPU,
         interpreted elsewhere — callers no longer hard-code it.
+      fuse_epilogue: fuse the epilogue's base-score add into the Pallas
+        kernel's last feature tile (kernel v3) — bit-identical, saves
+        the separate epilogue pass's HBM round-trip.  'auto' (default)
+        fuses exactly when eligible: backend='pallas' with no mesh (a
+        row-sharded psum would count the base once per shard).  True
+        demands fusion (engine bind fails if ineligible); False keeps
+        the separate epilogue (the differential-test pivot).
       batching: chip-side input batching (§III-D Fig. 7c) — replicate a
         small model across core groups; feeds ``plan_noc`` at build time.
       compress: RETENTION-style table compression level applied between
@@ -85,6 +92,7 @@ class DeployConfig:
     table_dtype: str = "auto"
     c_mult: int = 8
     interpret: bool | str = "auto"
+    fuse_epilogue: bool | str = "auto"
     batching: bool = False
     compress: str = "off"
 
@@ -115,6 +123,8 @@ class DeployConfig:
             raise ValueError("f_blk must be >= 1")
         if self.interpret not in (True, False, "auto"):
             raise ValueError("interpret must be True, False or 'auto'")
+        if self.fuse_epilogue not in (True, False, "auto"):
+            raise ValueError("fuse_epilogue must be True, False or 'auto'")
         if self.compress not in COMPRESS_LEVELS:
             raise ValueError(
                 f"compress {self.compress!r} not in {COMPRESS_LEVELS}"

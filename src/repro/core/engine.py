@@ -181,6 +181,13 @@ class XTimeEngine:
             if table.feature_ids is None
             else np.asarray(table.feature_ids, dtype=np.int64)
         )
+        # column-clustered tables (order_columns_by_activity) additionally
+        # permute their stored columns; queries follow AFTER the narrowing
+        self.col_perm = (
+            None
+            if table.col_perm is None
+            else np.asarray(table.col_perm, dtype=np.int64)
+        )
         self.backend = config.backend
         if self.backend == "pallas" and not pallas_available():
             # jaxlib builds without the pallas TPU extension can't run the
@@ -218,6 +225,21 @@ class XTimeEngine:
             self.kernel_mode = "inclusive"
         else:
             self.kernel_mode = config.mode
+        # kernel v3 fused epilogue: the base-score add rides the kernel's
+        # last feature tile.  Only the single-device pallas path is
+        # eligible — under a row-sharded mesh the per-shard partials are
+        # psum'd, which would count the base once per shard.
+        eligible = self.backend == "pallas" and mesh is None
+        if config.fuse_epilogue == "auto":
+            self.fuse_epilogue = eligible
+        else:
+            self.fuse_epilogue = bool(config.fuse_epilogue)
+            if self.fuse_epilogue and not eligible:
+                raise ValueError(
+                    "fuse_epilogue=True needs backend='pallas' and no mesh "
+                    "(a row-sharded reduction would multiply the base "
+                    "score); use 'auto' to fuse only when eligible"
+                )
         # 'auto' partitioning resolves at bind time: explicit shard_map
         # collectives when there is a mesh to communicate over, plain jit
         # otherwise (without a mesh both modes are the same program).
@@ -268,6 +290,14 @@ class XTimeEngine:
             table_dtype=self.table_dtype,
             inclusive=inclusive,
         )
+        # fused-epilogue bias row: base score broadcast over C_pad (the
+        # padding channels are sliced off by the epilogue, so the extra
+        # adds are dead); None when the epilogue stays separate
+        self._bias = (
+            jnp.full((1, self.arrays.c_pad), jnp.float32(table.base_score))
+            if self.fuse_epilogue
+            else None
+        )
         if mesh is not None:
             self._place_on_mesh()
         self._fn_cache: dict = {}
@@ -314,12 +344,12 @@ class XTimeEngine:
         Under shard_map the operands (and B/R) are per-shard."""
         backend, mode = self.backend, self.kernel_mode
         b_blk, r_blk, f_blk = self.b_blk, self.r_blk, self.f_blk
-        interpret = self.interpret
+        interpret, bias = self.interpret, self._bias
 
         def kernel(q, low, high, leaf, mask):
             if backend == "pallas":
                 return kops.cam_match(
-                    q, low, high, leaf, mask,
+                    q, low, high, leaf, mask, bias,
                     out_b=q.shape[0], out_c=leaf.shape[1],
                     b_blk=b_blk, r_blk=r_blk, f_blk=f_blk,
                     mode=mode, interpret=interpret,
@@ -331,12 +361,16 @@ class XTimeEngine:
     def _epilogue_fn(self) -> Callable:
         """Channel slice + base score + RF averaging — applied exactly once,
         AFTER any cross-core reduction (adding the base score per shard
-        would count it row-shard-count times)."""
-        table = self.table
+        would count it row-shard-count times).  When the engine fuses the
+        epilogue into the kernel (kernel v3) the base score already landed
+        on each output tile's last visit — in the same float order, so the
+        bits match — and only the slice (+ RF divide) remains here."""
+        table, fused = self.table, self.fuse_epilogue
 
         def epilogue(out):
             out = out[:, : table.n_outputs]
-            out = out + jnp.float32(table.base_score)
+            if not fused:
+                out = out + jnp.float32(table.base_score)
             if table.kind == "rf":
                 out = out / jnp.float32(max(1, table.n_trees))
             return out
@@ -416,21 +450,35 @@ class XTimeEngine:
 
     def select_features(self, q: np.ndarray | jnp.ndarray) -> jnp.ndarray:
         """Narrow ``(B, n_features)`` query bins to the stored table
-        columns — identity for uncompressed tables.  Queries already at
-        the physical width pass through, so the serving batcher can
-        narrow once per flush before bucket padding."""
+        columns, then apply the compile-time column permutation
+        (``CAMTable.col_perm``) — identity for plain tables.  Queries
+        already at the (narrower) physical width pass through, so the
+        serving batcher can narrow once per flush before bucket padding;
+        a PURE permutation preserves the width, so that shortcut never
+        applies to it and callers must pass logical-order queries (both
+        serving paths — ``_prep_queries`` and the batcher flush — call
+        this exactly once)."""
         q = jnp.asarray(q)
-        if self.feature_ids is None:
+        fids, perm = self.feature_ids, self.col_perm
+        if fids is None and perm is None:
             return q
-        if q.ndim == 2 and q.shape[1] == self.feature_ids.shape[0]:
-            return q
+        if (
+            fids is not None
+            and q.ndim == 2
+            and q.shape[1] == fids.shape[0]
+            and fids.shape[0] != self.table.n_features
+        ):
+            return q  # already narrowed (and permuted) by an earlier call
         if q.ndim != 2 or q.shape[1] != self.table.n_features:
-            raise ValueError(
-                f"expected (_, {self.table.n_features}) query bins (or "
-                f"pre-selected (_, {self.feature_ids.shape[0]})), got "
-                f"{q.shape}"
-            )
-        return q[:, self.feature_ids]
+            expect = f"expected (_, {self.table.n_features}) query bins"
+            if fids is not None:
+                expect += f" (or pre-selected (_, {fids.shape[0]}))"
+            raise ValueError(f"{expect}, got {q.shape}")
+        if fids is not None:
+            q = q[:, fids]
+        if perm is not None:
+            q = q[:, perm]
+        return q
 
     def _prep_queries(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
         # pad to a batch both the kernel tiling and the mesh sharding accept

@@ -30,7 +30,21 @@ from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import Ensemble, GBDTParams, RFParams, train_gbdt, train_rf
 from repro.data.tabular import TabularDataset, accuracy_metric
 
-TUNE_SCHEMA_VERSION = 1
+# v2: the plan carries a measured-cost DISPATCH table — one winning
+# (kernel version, block sizes) entry per swept batch bucket — on top of
+# the v1 top-level winner fields (which stay the primary-batch winner,
+# so v1 readers keep working and v1 plans keep loading: ``from_dict``
+# defaults an absent dispatch to empty and ``dispatch_for`` falls back
+# to the top-level winner).
+TUNE_SCHEMA_VERSION = 2
+
+
+def kernel_version(table_dtype: str) -> str:
+    """Kernel generation a resolved table dtype binds: the v1 int32
+    exclusive-high layout, or the v2 packed inclusive-high layout
+    (uint8/uint16).  The autotuner's dispatch table records this per
+    batch bucket — the measured winner, not a size heuristic."""
+    return "v1" if table_dtype == "int32" else "v2"
 
 
 @dataclass
@@ -136,11 +150,22 @@ def random_search(
 
 @dataclass(frozen=True)
 class TunePlan:
-    """The winning kernel configuration of one ``autotune_kernel`` sweep.
+    """The winning kernel configuration(s) of one ``autotune_kernel`` sweep.
 
     Serializes into the compiled-artifact sidecar (``CompiledModel.save``
     under the ``"tuning"`` key) so a reloaded artifact binds its engine
     with the tuned block sizes and dtype instead of re-searching.
+
+    Schema v2 adds ``dispatch``: one measured-cost entry per swept batch
+    bucket — ``{"batch", "b_blk", "r_blk", "table_dtype", "mode",
+    "kernel", "us_per_call"}`` — because the v1/v2 kernel crossover is
+    shape-dependent (the packed layout loses below a size threshold; see
+    benchmarks/records).  ``dispatch_for(batch)`` resolves a serving
+    batch to its bucket's winner, and ``apply(config, batch=...)`` folds
+    it in; registry cold starts bind the winning kernel per bucket via
+    ``CompiledModel.engine(batch_hint=...)``.  The top-level fields stay
+    the PRIMARY-batch winner, so v1 plans load (empty dispatch) and v1
+    readers of v2 plans see a valid single-bucket plan.
     """
 
     b_blk: int
@@ -152,15 +177,51 @@ class TunePlan:
     batch: int
     trials: list[dict] = field(default_factory=list)  # full sweep record
     env: dict = field(default_factory=dict)  # platform the sweep ran on
+    dispatch: list[dict] = field(default_factory=list)  # per-batch winners (v2)
     schema_version: int = TUNE_SCHEMA_VERSION
 
-    def apply(self, config: DeployConfig) -> DeployConfig:
-        """Fold the winner into ``config`` (the tuned execution knobs)."""
+    @property
+    def kernel(self) -> str:
+        """Kernel version the primary winner binds ('v1' | 'v2')."""
+        return kernel_version(self.table_dtype)
+
+    def dispatch_for(self, batch: int) -> dict:
+        """The measured winner for a serving ``batch``: the SMALLEST swept
+        bucket that covers it (a larger batch than every bucket takes the
+        largest — its measurement is the closest regime).  Plans without
+        a dispatch table (schema v1) fall back to the top-level winner as
+        a synthesized single-bucket entry."""
+        entries = sorted(self.dispatch, key=lambda e: int(e["batch"]))
+        for e in entries:
+            if batch <= int(e["batch"]):
+                return e
+        if entries:
+            return entries[-1]
+        return {
+            "batch": self.batch, "b_blk": self.b_blk, "r_blk": self.r_blk,
+            "table_dtype": self.table_dtype, "mode": self.mode,
+            "kernel": self.kernel, "us_per_call": self.us_per_call,
+        }
+
+    def apply(self, config: DeployConfig, batch: int | None = None) -> DeployConfig:
+        """Fold the winner into ``config`` (the tuned execution knobs).
+
+        With ``batch`` the dispatch table picks the bucket winner; without
+        it the primary top-level winner applies (v1 behavior)."""
+        if batch is None:
+            return config.replace(
+                b_blk=self.b_blk,
+                r_blk=self.r_blk,
+                table_dtype=self.table_dtype,
+                mode=self.mode,
+                backend=self.backend,
+            )
+        e = self.dispatch_for(batch)
         return config.replace(
-            b_blk=self.b_blk,
-            r_blk=self.r_blk,
-            table_dtype=self.table_dtype,
-            mode=self.mode,
+            b_blk=int(e["b_blk"]),
+            r_blk=int(e["r_blk"]),
+            table_dtype=str(e["table_dtype"]),
+            mode=str(e["mode"]),
             backend=self.backend,
         )
 
@@ -200,6 +261,7 @@ def autotune_kernel(
     *,
     deploy: DeployConfig | None = None,
     batch: int = 256,
+    batches: tuple[int, ...] = (),
     b_blks: tuple[int, ...] = (64, 128, 256),
     r_blks: tuple[int, ...] = (128, 256, 512),
     table_dtypes: tuple[str, ...] | None = None,
@@ -216,8 +278,18 @@ def autotune_kernel(
     admissible (table_dtype, mode) pairs, deduplicated by their RESOLVED
     kernel layout — e.g. 'direct' and 'inclusive' collapse onto the same
     packed-inclusive kernel, and the faithful modes only ever run int32.
-    Every candidate computes the same bits (the engine equivalence
-    contract), so the sweep is purely a performance search.
+    The dtype axis is the kernel VERSION axis: the default sweep times
+    both the v1 int32 layout and the v2 packed layout, because neither
+    wins at every shape.  Every candidate computes the same bits (the
+    engine equivalence contract), so the sweep is purely a performance
+    search.
+
+    ``batches`` adds batch buckets beyond the primary ``batch``: every
+    candidate is timed at every bucket (padding included — what serving
+    pays) and the per-bucket winners become the plan's DISPATCH table,
+    so a registry cold start binds the measured-best kernel per serving
+    bucket (``CompiledModel.engine(batch_hint=...)``).  The top-level
+    winner stays the primary-``batch`` one.
 
     The winner is returned as a :class:`TunePlan`;
     ``CompiledModel.with_tuning(plan)`` persists it in the artifact.
@@ -264,23 +336,38 @@ def autotune_kernel(
                         )
                     )
 
+    buckets = sorted({int(batch), *(int(b) for b in batches)})
     rng = np.random.default_rng(seed)
-    q = rng.integers(0, table.n_bins, size=(batch, table.n_features))
+    # one query pool sized for the largest bucket; each bucket slices a
+    # prefix so every candidate sees identical inputs per bucket
+    q_pool = rng.integers(0, table.n_bins, size=(max(buckets), table.n_features))
     trials: list[dict] = []
-    best: tuple[float, DeployConfig] | None = None
+    # per-bucket best, engines reused across buckets (jit caches per shape)
+    best: dict[int, tuple[float, DeployConfig]] = {}
     for cfg in candidates:
         engine = XTimeEngine.from_config(table, cfg)
-        us = _time_margin(engine, q, warmup=warmup, iters=iters)
-        trials.append({
-            "b_blk": cfg.b_blk, "r_blk": cfg.r_blk,
-            "table_dtype": cfg.table_dtype, "mode": cfg.mode,
-            "us_per_call": round(us, 2),
-        })
-        if best is None or us < best[0]:
-            best = (us, cfg)
+        for b in buckets:
+            us = _time_margin(engine, q_pool[:b], warmup=warmup, iters=iters)
+            trials.append({
+                "batch": b, "b_blk": cfg.b_blk, "r_blk": cfg.r_blk,
+                "table_dtype": cfg.table_dtype, "mode": cfg.mode,
+                "kernel": kernel_version(cfg.table_dtype),
+                "us_per_call": round(us, 2),
+            })
+            if b not in best or us < best[b][0]:
+                best[b] = (us, cfg)
 
-    assert best is not None, "empty autotune candidate set"
-    us, cfg = best
+    assert best, "empty autotune candidate set"
+    dispatch = [
+        {
+            "batch": b, "b_blk": c.b_blk, "r_blk": c.r_blk,
+            "table_dtype": c.table_dtype, "mode": c.mode,
+            "kernel": kernel_version(c.table_dtype),
+            "us_per_call": round(u, 2),
+        }
+        for b, (u, c) in sorted(best.items())
+    ]
+    us, cfg = best[int(batch)]
     return TunePlan(
         b_blk=cfg.b_blk,
         r_blk=cfg.r_blk,
@@ -291,4 +378,5 @@ def autotune_kernel(
         batch=batch,
         trials=trials,
         env=_tune_env(),
+        dispatch=dispatch,
     )

@@ -84,12 +84,17 @@ def _cam_match_kernel(
     low_ref,  # (R_blk, f_blk) table dtype
     high_ref,  # (R_blk, f_blk) table dtype
     leaf_ref,  # (R_blk, C_pad) float32
-    out_ref,  # (B_blk, C_pad) float32
-    acc_ref,  # (B_blk, R_blk) int32 VMEM scratch — the running match line
-    *,
+    *refs,  # [bias_ref (1, C_pad) float32 when fused,] out_ref, acc_ref
     mode: str,
     n_f_tiles: int,
+    n_r_tiles: int,
+    fuse_bias: bool,
 ):
+    if fuse_bias:
+        bias_ref, out_ref, acc_ref = refs
+    else:
+        out_ref, acc_ref = refs
+        bias_ref = None
     j = pl.program_id(1)
     k = pl.program_id(2)
     cell = _CELL_MATCH[mode]
@@ -122,6 +127,27 @@ def _cam_match_kernel(
         def _acc():
             out_ref[...] += partial
 
+        if fuse_bias:
+            # fused epilogue: the base score lands on the LAST visit of
+            # this output tile (row axis is sequential, so j runs in
+            # order), AFTER the final partial — the same float order as
+            # the separate epilogue pass ((p_0 + ... + p_last) + base),
+            # hence bit-identical, without its extra HBM round-trip.
+            @pl.when(j == n_r_tiles - 1)
+            def _bias():
+                out_ref[...] += bias_ref[...]
+
+
+def full_tile_mask(n_r_tiles: int, n_f_tiles: int) -> jnp.ndarray:
+    """The every-tile-active mask — the EXPLICIT form of 'no mask given'.
+
+    ``cam_match_pallas(tile_mask=None)`` builds exactly this, so callers
+    without wildcard analysis pay the full compare on every tile (never a
+    silent skip).  Kept public so tests and callers can assert the
+    fallback's shape/semantics instead of shape-inferring it.
+    """
+    return jnp.ones((n_r_tiles, n_f_tiles), dtype=jnp.int32)
+
 
 @functools.partial(
     jax.jit,
@@ -133,6 +159,7 @@ def cam_match_pallas(
     high: jnp.ndarray,  # (R, F_pad) table dtype
     leaf: jnp.ndarray,  # (R, C_pad) float32
     tile_mask: jnp.ndarray | None = None,  # (R/r_blk, F_pad/f_blk) int32
+    bias: jnp.ndarray | None = None,  # (1, C_pad) float32 fused epilogue
     *,
     b_blk: int = 128,
     r_blk: int = 256,
@@ -143,8 +170,15 @@ def cam_match_pallas(
     """(B, C_pad) accumulated logits.  All dims must divide their blocks.
 
     ``tile_mask[j, k] == 0`` marks an all-wildcard (always-match) tile the
-    compare may skip; ``None`` compares every tile.  ``interpret=None``
-    resolves via :func:`default_interpret` (compiled on TPU only).
+    compare may skip; ``None`` falls back EXPLICITLY to
+    :func:`full_tile_mask` (every tile compared), and a mask of the wrong
+    shape is rejected here — under interpret mode a misshapen mask would
+    otherwise read out-of-bounds activity bits and silently skip live
+    tiles.  ``bias`` fuses the epilogue's base-score add into the last
+    (row, feature) visit of each output tile — bit-identical to adding it
+    after the kernel (same float order), one less HBM round-trip.
+    ``interpret=None`` resolves via :func:`default_interpret` (compiled on
+    TPU only).
     """
     B, F_pad = q.shape
     R = low.shape[0]
@@ -156,11 +190,28 @@ def cam_match_pallas(
     if F_pad % f_blk:
         raise ValueError(f"F_pad={F_pad} must be a multiple of f_blk={f_blk}")
     n_f_tiles = F_pad // f_blk
+    n_r_tiles = R // r_blk
     if tile_mask is None:
-        tile_mask = jnp.ones((R // r_blk, n_f_tiles), dtype=jnp.int32)
+        tile_mask = full_tile_mask(n_r_tiles, n_f_tiles)
+    elif tuple(tile_mask.shape) != (n_r_tiles, n_f_tiles):
+        raise ValueError(
+            f"tile_mask shape {tuple(tile_mask.shape)} does not tile "
+            f"(R={R}, F_pad={F_pad}) by (r_blk={r_blk}, f_blk={f_blk}); "
+            f"expected ({n_r_tiles}, {n_f_tiles}) — pass None for the "
+            "explicit every-tile-active fallback (full_tile_mask)"
+        )
+    if tile_mask.dtype != jnp.int32:
+        tile_mask = tile_mask.astype(jnp.int32)
+    if bias is not None and tuple(bias.shape) != (1, C_pad):
+        raise ValueError(
+            f"bias shape {tuple(bias.shape)} must be (1, C_pad={C_pad})"
+        )
 
     grid = (B // b_blk, R // r_blk, n_f_tiles)
-    kernel = functools.partial(_cam_match_kernel, mode=mode, n_f_tiles=n_f_tiles)
+    kernel = functools.partial(
+        _cam_match_kernel, mode=mode, n_f_tiles=n_f_tiles,
+        n_r_tiles=n_r_tiles, fuse_bias=bias is not None,
+    )
 
     if not pallas_available():  # pragma: no cover - jaxlib-build dependent
         raise RuntimeError(
@@ -181,19 +232,25 @@ def cam_match_pallas(
         except AttributeError:  # pragma: no cover - older pltpu API
             compiler_params = None
 
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j, k: (j, k)),  # tile activity
+        pl.BlockSpec((b_blk, f_blk), lambda i, j, k: (i, k)),  # queries
+        pl.BlockSpec((r_blk, f_blk), lambda i, j, k: (j, k)),  # CAM low
+        pl.BlockSpec((r_blk, f_blk), lambda i, j, k: (j, k)),  # CAM high
+        pl.BlockSpec((r_blk, C_pad), lambda i, j, k: (j, 0)),  # leaf matrix
+    ]
+    operands = [tile_mask, q, low, high, leaf]
+    if bias is not None:  # fused epilogue bias, one (1, C_pad) row
+        in_specs.append(pl.BlockSpec((1, C_pad), lambda i, j, k: (0, 0)))
+        operands.append(bias)
+
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, k: (j, k)),  # tile activity
-            pl.BlockSpec((b_blk, f_blk), lambda i, j, k: (i, k)),  # queries
-            pl.BlockSpec((r_blk, f_blk), lambda i, j, k: (j, k)),  # CAM low
-            pl.BlockSpec((r_blk, f_blk), lambda i, j, k: (j, k)),  # CAM high
-            pl.BlockSpec((r_blk, C_pad), lambda i, j, k: (j, 0)),  # leaf matrix
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((b_blk, C_pad), lambda i, j, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, C_pad), jnp.float32),
         scratch_shapes=scratch,
         compiler_params=compiler_params,
         interpret=interpret,
-    )(tile_mask, q, low, high, leaf)
+    )(*operands)

@@ -223,6 +223,7 @@ def cam_match(
     high: jnp.ndarray,
     leaf: jnp.ndarray,
     tile_mask: jnp.ndarray | None = None,
+    bias: jnp.ndarray | None = None,
     *,
     out_b: int,
     out_c: int,
@@ -232,9 +233,14 @@ def cam_match(
     mode: str = "direct",
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Kernel entry on pre-padded operands; returns unpadded (out_b, out_c)."""
+    """Kernel entry on pre-padded operands; returns unpadded (out_b, out_c).
+
+    ``bias`` is the optional (1, C_pad) fused-epilogue row added inside
+    the kernel on each output tile's last visit (kernel v3); callers
+    fusing it must NOT add the base score again downstream.
+    """
     out = cam_match_pallas(
-        q_padded, low, high, leaf, tile_mask,
+        q_padded, low, high, leaf, tile_mask, bias,
         b_blk=b_blk, r_blk=r_blk, f_blk=f_blk, mode=mode, interpret=interpret,
     )
     return out[:out_b, :out_c]

@@ -243,6 +243,20 @@ class TableRegistry:
     def engine(self, name: str) -> XTimeEngine:
         return self.get(name).engine
 
+    def engine_for_batch(self, name: str, batch: int) -> XTimeEngine:
+        """The engine serving ``batch``-sized requests of ``name``.
+
+        A tuned artifact (kernel v3) carries a measured per-batch-bucket
+        dispatch table in its ``TunePlan``; this binds (and memoizes, via
+        the artifact's engine cache) the winning kernel configuration for
+        the bucket covering ``batch``.  Untuned artifacts fall back to
+        the entry's default engine.
+        """
+        entry = self.get(name)
+        if entry.artifact.tuning is None:
+            return entry.engine
+        return entry.artifact.engine(mesh=self.mesh, batch_hint=int(batch))
+
     def artifact(self, name: str) -> CompiledModel:
         return self.get(name).artifact
 

@@ -2,29 +2,16 @@
 
 import jax.numpy as jnp
 import numpy as np
+from oracles import compact_problem
 
 from repro.kernels.cam_match import cam_match_pallas
 from repro.kernels.ref import cam_match_ref
 
 
-def _compact_problem(rng, b, r, f, c):
-    low = rng.integers(0, 256, size=(r, f)).astype(np.uint8)
-    width = rng.integers(0, 256, size=(r, f))
-    high = np.minimum(low.astype(np.int64) + width, 255).astype(np.uint8)
-    dc = rng.random((r, f)) < 0.3  # always-match cells
-    low[dc], high[dc] = 0, 255
-    # never-match padding rows: low=1 > high=0
-    low[-3:], high[-3:] = 1, 0
-    leaf = rng.normal(size=(r, c)).astype(np.float32)
-    leaf[-3:] = 0.0
-    q = rng.integers(0, 256, size=(b, f)).astype(np.uint8)
-    return q, low, high, leaf
-
-
 def test_inclusive_uint8_kernel_matches_oracle():
     rng = np.random.default_rng(11)
     b, r, f, c = 128, 512, 128, 8
-    q, low, high, leaf = _compact_problem(rng, b, r, f, c)
+    q, low, high, leaf = compact_problem(rng, b, r, f, c)
     out = cam_match_pallas(
         jnp.asarray(q), jnp.asarray(low), jnp.asarray(high), jnp.asarray(leaf),
         b_blk=128, r_blk=256, mode="inclusive", interpret=True,

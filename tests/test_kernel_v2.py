@@ -13,10 +13,10 @@ import os
 import subprocess
 import sys
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
+from oracles import assert_packed_reencoding_bit_equal, random_tables
 
 from repro.core.compile import (
     compile_ensemble,
@@ -27,7 +27,6 @@ from repro.core.deploy import DeployConfig
 from repro.core.engine import XTimeEngine, resolve_table_dtype
 from repro.core.trees import GBDTParams, train_gbdt
 from repro.kernels import ops as kops
-from repro.kernels.ref import cam_match_ref
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -71,77 +70,8 @@ def test_faithful_modes_pin_int32():
 
 
 # -- packed-kernel bit-equivalence vs the v1 int32 oracle ----------------------
-
-
-def _random_tables(rng, r, f, n_bins, *, edge_bias=0.3, wildcard=0.3):
-    """Exclusive-high int32 tables with wildcard rows and dtype-boundary
-    bin values (0 and n_bins-1 appear both as thresholds and queries)."""
-    low = rng.integers(0, n_bins, size=(r, f)).astype(np.int32)
-    high = np.minimum(low + rng.integers(1, n_bins, size=(r, f)), n_bins)
-    high = high.astype(np.int32)
-    # force dtype-boundary cells: [0, 1) at the bottom, [n_bins-1, n_bins)
-    # at the top of the grid
-    edge = rng.random((r, f)) < edge_bias
-    lo_edge = rng.random((r, f)) < 0.5
-    low[edge & lo_edge], high[edge & lo_edge] = 0, 1
-    low[edge & ~lo_edge], high[edge & ~lo_edge] = n_bins - 1, n_bins
-    dc = rng.random((r, f)) < wildcard
-    low[dc], high[dc] = 0, n_bins
-    # whole-row wildcard sentinels (ingest bias rows)
-    low[: max(1, r // 16)] = 0
-    high[: max(1, r // 16)] = n_bins
-    return low, high
-
-
-def _run_encoding(q, low, high, leaf, *, n_bins, dtype, mode, backend, b, c):
-    """One cam_match evaluation in the given table encoding/backend."""
-    lo_p, hi_p, lm, incl = kops.pack_tables(
-        low, high, leaf, r_blk=32, n_bins=n_bins, dtype=dtype,
-    )
-    assert incl == (np.dtype(dtype).kind == "u")
-    mask = kops.wildcard_tile_mask(
-        lo_p, hi_p, r_blk=32, f_blk=128, n_bins=n_bins, inclusive=incl,
-    )
-    kernel_mode = "inclusive" if incl else mode
-    qp = kops.pad_queries(jnp.asarray(q), lo_p.shape[1], b_blk=32, dtype=dtype)
-    if backend == "pallas":
-        out = kops.cam_match(
-            qp, jnp.asarray(lo_p), jnp.asarray(hi_p), jnp.asarray(lm),
-            jnp.asarray(mask), out_b=b, out_c=c, b_blk=32, r_blk=32,
-            mode=kernel_mode, interpret=True,
-        )
-    else:
-        out = cam_match_ref(
-            qp, jnp.asarray(lo_p), jnp.asarray(hi_p), jnp.asarray(lm),
-            mode=kernel_mode,
-        )[:b, :c]
-    return np.asarray(out)
-
-
-def _oracle_vs_packed(seed, n_bins, dtype, mode, backend):
-    """Packed tables are a RE-ENCODING of the v1 int32 layout: identical
-    bits out when only the encoding differs (same shapes, same backend,
-    hence the same float reduction order)."""
-    rng = np.random.default_rng(seed)
-    b, r, f, c = 32, 96, 11, 3
-    low, high = _random_tables(rng, r, f, n_bins)
-    leaf = rng.normal(size=(r, c)).astype(np.float32)
-    q = rng.integers(0, n_bins, size=(b, f)).astype(np.int32)
-    # boundary queries
-    q[:4] = 0
-    q[4:8] = n_bins - 1
-
-    kw = dict(n_bins=n_bins, mode=mode, backend=backend, b=b, c=c)
-    oracle = _run_encoding(q, low, high, leaf, dtype="int32", **kw)
-    packed = _run_encoding(q, low, high, leaf, dtype=dtype, **kw)
-    np.testing.assert_array_equal(packed, oracle)
-    # and the match SEMANTICS (not just the float sums) agree with the
-    # plain unpadded reference within float32 reassociation
-    ref = np.asarray(
-        cam_match_ref(jnp.asarray(q), jnp.asarray(low), jnp.asarray(high),
-                      jnp.asarray(leaf), mode="direct")
-    )
-    np.testing.assert_allclose(packed, ref, rtol=1e-5, atol=1e-6)
+# (the generators and the differential assertion live in tests/oracles.py,
+# shared with test_kernel_compact.py and test_kernel_v3.py)
 
 
 @settings(max_examples=10, deadline=None)
@@ -151,23 +81,23 @@ def test_uint8_packed_bit_equals_int32_oracle(seed):
     exclusive tables — identical bits out, jnp and Pallas, boundary bins
     0/255 and wildcard rows included."""
     for backend in ("jnp", "pallas"):
-        _oracle_vs_packed(seed, 256, "uint8", "direct", backend)
+        assert_packed_reencoding_bit_equal(seed, 256, "uint8", "direct", backend)
 
 
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_uint16_packed_bit_equals_int32_oracle(seed):
     """Same property on a 16-bit grid (boundary bin 65535)."""
-    _oracle_vs_packed(seed, 1 << 16, "uint16", "direct", "jnp")
+    assert_packed_reencoding_bit_equal(seed, 1 << 16, "uint16", "direct", "jnp")
 
 
 def test_uint16_pallas_spot():
-    _oracle_vs_packed(7, 1 << 16, "uint16", "direct", "pallas")
+    assert_packed_reencoding_bit_equal(7, 1 << 16, "uint16", "direct", "pallas")
 
 
 def test_packed_overflow_rejected():
     rng = np.random.default_rng(0)
-    low, high = _random_tables(rng, 8, 4, 4096)
+    low, high = random_tables(rng, 8, 4, 4096)
     leaf = np.zeros((8, 1), dtype=np.float32)
     with pytest.raises(ValueError):
         kops.pack_tables(low, high, leaf, n_bins=4096, dtype="uint8")
