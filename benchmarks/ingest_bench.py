@@ -51,7 +51,7 @@ def run() -> list[dict]:
         x_float = ds.x_test[: min(256, len(ds.x_test))]
         ref = ens.raw_margin(q.transform(x_float))
         eng = artifact.engine()
-        xb = artifact.bin(x_float)
+        xb = artifact.quantizer.transform(x_float)
         if not np.allclose(np.asarray(eng.raw_margin(xb)), ref,
                            rtol=1e-5, atol=1e-6):
             raise AssertionError("ingested margins diverge from native model")

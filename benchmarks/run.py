@@ -55,6 +55,7 @@ MODULE_NAMES = [
     "serve_async_bench",
     "ingest_bench",
     "compress_bench",
+    "score_bench",
 ]
 
 

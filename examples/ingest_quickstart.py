@@ -9,7 +9,9 @@ side with no xgboost installed anywhere:
     2. ingest it: parse -> threshold-grid lowering -> compile -> place
        (``repro.api.build`` accepts the dump path directly)
     3. save the CompiledModel artifact, cold-start a TableRegistry from
-       it, and serve float queries binned with the artifact's own grid
+       it, and serve FLOAT queries in one call — ``served.predict(x)``
+       bins with the artifact's own grid and dispatches the
+       batch-hinted engine internally
 
 Run:  PYTHONPATH=src python examples/ingest_quickstart.py
 """
@@ -59,8 +61,7 @@ def main() -> None:
         reg.register("churn", served)
 
         x = ds.x_test[:256]  # FLOAT queries: the artifact bins them
-        xb = served.bin(x)
-        pred = np.asarray(reg.engine("churn").predict(xb))
+        pred = served.predict(x)
         native = ens.predict(quant.transform(x))
         print(f"[serve]   {len(x)} float queries -> "
               f"{int((pred == native).sum())}/{len(x)} predictions "

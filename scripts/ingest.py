@@ -21,57 +21,14 @@ over every checked-in fixture.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-import numpy as np  # noqa: E402
+from _cli import verify_expected  # noqa: E402,F401  (bootstraps src/)
 
 from repro.ingest import FORMATS, IngestError, load_model  # noqa: E402
-
-
-def verify_expected(artifact, expected_path: Path) -> int:
-    """Serve the recorded queries through the engine.
-
-    Predictions must be BIT-IDENTICAL to the record; engine raw margins
-    must sit within the float32 accumulation tolerance of the engine
-    contract (the matmul accumulation order differs from the reference
-    traversal by ~1 ULP — DESIGN.md §8; the bit-exact margin guarantee
-    is on the numpy lowering, covered by tests/test_ingest.py).
-    """
-    exp = json.loads(expected_path.read_text())
-    x = np.asarray(exp["x"], dtype=np.float64)
-    want_margin = np.asarray(exp["raw_margin"], dtype=np.float32)
-    want_pred = np.asarray(exp["predict"])
-    xb = artifact.bin(x)
-    engine = artifact.engine()
-    got_margin = np.asarray(engine.raw_margin(xb), dtype=np.float32)
-    got_pred = np.asarray(engine.predict(xb))
-    ok = True
-    if not np.allclose(got_margin, want_margin, rtol=1e-5, atol=1e-6):
-        bad = int((~np.isclose(got_margin, want_margin,
-                               rtol=1e-5, atol=1e-6)).sum())
-        print(f"[verify]  FAIL raw_margin: {bad}/{want_margin.size} cells "
-              "outside engine tolerance", file=sys.stderr)
-        ok = False
-    if artifact.table.task == "regression":
-        # regression "predictions" ARE the margins: engine tolerance
-        pred_ok = np.allclose(got_pred, want_pred, rtol=1e-5, atol=1e-6)
-    else:
-        pred_ok = np.array_equal(
-            np.asarray(got_pred, dtype=want_pred.dtype), want_pred
-        )
-    if not pred_ok:
-        print("[verify]  FAIL predict: outputs differ from the record",
-              file=sys.stderr)
-        ok = False
-    if ok:
-        print(f"[verify]  OK — {x.shape[0]} queries: predictions "
-              f"bit-identical, margins within engine tolerance "
-              f"({expected_path.name})")
-    return 0 if ok else 1
 
 
 def main(argv: list[str] | None = None) -> int:

@@ -1,13 +1,18 @@
 """repro — X-TIME (CAM-based tree-ensemble inference) rebuilt as a JAX framework.
 
-Public API surface:
+Public API surface (every name below is importable from ``repro``
+directly; the README module map mirrors this list):
+
     repro.api        compiled-artifact API: ``build`` -> ``CompiledModel``
-                     (save/load/engine) + ``DeployConfig``
+                     (save/load/predict/engine) + ``DeployConfig``
     repro.ingest     zero-dependency importers: XGBoost-JSON / LightGBM-text /
                      sklearn-dict dumps -> ``ImportedEnsemble`` -> ``build``
+    repro.score      streaming offline batch scoring: artifact × columnar
+                     file -> predictions at max rows/s (``score_file``)
     repro.core       the paper's contribution (tree training, CAM compile, engine)
     repro.kernels    Pallas TPU kernels (cam_match) + jnp oracles
-    repro.serve      multi-model registry + micro-batching serve loop
+    repro.serve      multi-model registry, micro-batching serve loop, and the
+                     async ``ClusterServer`` tier with traffic replay
     repro.models     LM substrate for the assigned architectures
     repro.configs    architecture registry (``get_config(name)``)
     repro.launch     mesh / dryrun / train / serve entry points
@@ -19,11 +24,38 @@ without importing jax until an engine is bound.
 
 __version__ = "1.0.0"
 
+# name -> defining module; resolved on first attribute access (PEP 562)
 _LAZY = {
+    # artifact API
     "build": "repro.api",
     "CompiledModel": "repro.api",
     "DeployConfig": "repro.core.deploy",
+    "ChipSpec": "repro.core.compile",
+    # engine + tuning
+    "XTimeEngine": "repro.core.engine",
+    "autotune_kernel": "repro.core.tune",
+    "TunePlan": "repro.core.tune",
+    # quantization grid
+    "FeatureQuantizer": "repro.core.quantize",
+    # ingestion
+    "load_model": "repro.ingest",
+    # offline scoring
+    "score_file": "repro.score",
+    "ScoreResult": "repro.score",
+    "open_columnar": "repro.score",
+    # serving
+    "TableRegistry": "repro.serve",
+    "MicroBatcher": "repro.serve",
+    "ServeLoop": "repro.serve",
+    "ClusterServer": "repro.serve",
+    "make_trace": "repro.serve",
+    "replay_trace": "repro.serve",
 }
+
+#: submodules reachable as ``repro.<name>`` without an explicit import
+_SUBMODULES = ("api", "ingest", "score", "serve", "core", "kernels", "launch")
+
+__all__ = sorted(_LAZY) + ["__version__"]
 
 
 def __getattr__(name: str):
@@ -33,10 +65,10 @@ def __getattr__(name: str):
         value = getattr(importlib.import_module(_LAZY[name]), name)
         globals()[name] = value
         return value
-    if name in ("api", "ingest"):
+    if name in _SUBMODULES:
         return importlib.import_module(f"repro.{name}")
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__() -> list[str]:
-    return sorted(set(globals()) | set(_LAZY) | {"api", "ingest"})
+    return sorted(set(globals()) | set(_LAZY) | set(_SUBMODULES))

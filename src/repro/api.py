@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import warnings
 from dataclasses import dataclass
 from pathlib import Path
 from typing import TYPE_CHECKING
@@ -356,15 +357,63 @@ class CompiledModel:
             compression=sidecar.get("compression"),
         )
 
-    # -- ingested-model serving ----------------------------------------------
+    # -- float-in serving ----------------------------------------------------
+
+    def _binned(self, x: np.ndarray, caller: str) -> np.ndarray:
+        """Float queries -> the integer bins this artifact's tables index;
+        already-binned integer queries pass through untouched."""
+        x = np.asarray(x)
+        if x.dtype.kind in "iu":
+            return x
+        if self.quantizer is None:
+            raise ValueError(
+                f"{caller} got float queries but this artifact has no "
+                "feature grid attached; build with quantizer=... (or from "
+                "an ingested dump), or pass already-binned integer queries"
+            )
+        return self.quantizer.transform(x)
+
+    def predict(self, x: np.ndarray, *, mesh=None, **overrides) -> np.ndarray:
+        """Final predictions for a batch of float (or pre-binned) rows.
+
+        The one-call entry point: bins ``x`` with the artifact's attached
+        grid, binds the batch-hinted engine (a tuned artifact's dispatch
+        table picks the measured-best kernel for this batch size), and
+        runs it — replacing the old ``model.bin(x)`` →
+        ``model.engine().predict(...)`` two-step.  Integer input skips
+        the grid (already binned).  Engine bindings are memoized, so
+        repeated same-shaped calls reuse the compiled entry.
+
+        Returns ``(B,)`` int32 class ids, or float32 values for
+        regression.  For raw per-channel scores use :meth:`raw_margin`;
+        for bulk file scoring use ``repro.score.score_file``.
+        """
+        q = self._binned(x, "predict")
+        eng = self.engine(mesh=mesh, batch_hint=q.shape[0], **overrides)
+        return np.asarray(eng.predict(q))
+
+    def raw_margin(self, x: np.ndarray, *, mesh=None, **overrides) -> np.ndarray:
+        """Raw ``(B, n_outputs)`` margins for float (or pre-binned) rows —
+        the margin-kind counterpart of :meth:`predict`."""
+        q = self._binned(x, "raw_margin")
+        eng = self.engine(mesh=mesh, batch_hint=q.shape[0], **overrides)
+        return np.asarray(eng.raw_margin(q))
 
     def bin(self, x: np.ndarray) -> np.ndarray:
-        """Float queries -> the integer bins this artifact's tables index.
+        """Deprecated: float queries -> integer bins, the old first half of
+        the ``bin()`` → ``engine().predict()`` two-step.
 
-        Only artifacts built from an ingested model (or with an explicit
-        quantizer) carry the grid; native callers hold their own
-        ``FeatureQuantizer``.
+        Call :meth:`predict` / :meth:`raw_margin` directly (they bin
+        internally), or ``model.quantizer.transform(x)`` when only the
+        bins are wanted.
         """
+        warnings.warn(
+            "CompiledModel.bin() is deprecated: call model.predict(x) / "
+            "model.raw_margin(x) directly (they bin float queries "
+            "internally), or model.quantizer.transform(x) for bare bins",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         if self.quantizer is None:
             raise ValueError(
                 "this artifact has no feature grid attached; bin queries "

@@ -1,0 +1,35 @@
+"""Regenerate the committed score fixtures.
+
+    python tests/fixtures/score/make_fixtures.py
+
+``xgb_deep_x.npy`` is the golden query block from
+``tests/fixtures/ingest/xgb_deep.expected.json`` re-serialized as the
+columnar ``.npy`` input ``scripts/score.py`` streams — CI's
+``score-golden`` job scores it against that same record, closing the
+ingest -> save -> score -> verify loop on one fixture.  Deriving the
+file (rather than hand-writing it) keeps the two copies of the queries
+provably in sync.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+HERE = Path(__file__).resolve().parent
+
+
+def main() -> None:
+    exp = json.loads(
+        (HERE.parent / "ingest" / "xgb_deep.expected.json").read_text()
+    )
+    x = np.asarray(exp["x"], dtype=np.float64)
+    out = HERE / "xgb_deep_x.npy"
+    np.save(out, x)
+    print(f"{out.name}: {x.shape} {x.dtype}, {out.stat().st_size} bytes")
+
+
+if __name__ == "__main__":
+    main()

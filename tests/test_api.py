@@ -312,6 +312,51 @@ def test_legacy_registry_kwargs_warn_but_work(trained):
     )
 
 
+# -- float-in predict API ------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def gridded():
+    """An artifact with an attached grid + the float queries it bins."""
+    ds = make_dataset("churn")
+    q = FeatureQuantizer.fit(ds.x_train, 64)
+    ens = train_gbdt(q.transform(ds.x_train), ds.y_train, task="binary",
+                     n_bins=64, params=GBDTParams(n_rounds=4, max_leaves=16))
+    return build(ens, quantizer=q), ds.x_test[:96].astype(np.float64), q
+
+
+def test_predict_one_call_equals_two_step(gridded):
+    """model.predict(x) == the old bin -> engine().predict two-step,
+    bit for bit (same engine binding via batch_hint)."""
+    cm, x, q = gridded
+    xb = q.transform(x)
+    eng = cm.engine(batch_hint=x.shape[0])
+    np.testing.assert_array_equal(cm.predict(x), np.asarray(eng.predict(xb)))
+    np.testing.assert_array_equal(
+        cm.raw_margin(x), np.asarray(eng.raw_margin(xb))
+    )
+    # pre-binned integer queries skip the grid
+    np.testing.assert_array_equal(cm.predict(xb), np.asarray(eng.predict(xb)))
+
+
+def test_predict_without_grid_is_a_clear_error(trained):
+    ens, xb = trained["binary"]
+    cm = build(ens)  # no quantizer attached
+    with pytest.raises(ValueError, match="no feature grid"):
+        cm.predict(xb.astype(np.float64))
+    with pytest.raises(ValueError, match="no feature grid"):
+        cm.raw_margin(xb.astype(np.float64))
+    # binned input still serves without a grid
+    assert cm.predict(xb).shape == (xb.shape[0],)
+
+
+def test_bin_shim_warns_but_still_bins(gridded):
+    cm, x, q = gridded
+    with pytest.warns(DeprecationWarning, match="CompiledModel.bin"):
+        xb = cm.bin(x)
+    np.testing.assert_array_equal(xb, q.transform(x))
+
+
 def test_deploy_config_validation():
     with pytest.raises(ValueError):
         DeployConfig(backend="cuda")

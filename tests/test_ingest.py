@@ -79,7 +79,7 @@ def test_golden_engine_all_cell_modes(dump, mode):
     mode; margins within the engine's ~1 ULP accumulation contract."""
     exp = _expected(dump)
     cm = build(str(dump))
-    xb = cm.bin(exp["x"])
+    xb = cm.quantizer.transform(exp["x"])
     eng = cm.engine(mode=mode)
     got_pred = np.asarray(eng.predict(xb))
     if cm.table.task == "regression":
@@ -106,7 +106,7 @@ def test_golden_compressed_build_matches_record(dump):
     cm = build(str(dump), compress="auto")
     assert cm.compression is not None
     assert cm.deploy.compress == "full"
-    xb = cm.bin(exp["x"])
+    xb = cm.quantizer.transform(exp["x"])
     got_pred = np.asarray(cm.engine().predict(xb))
     if cm.table.task == "regression":
         np.testing.assert_allclose(got_pred, exp["predict"],
@@ -132,7 +132,7 @@ def test_deep_fixture_compresses_bit_exactly():
     assert rep["rows_saved"] > 0 and rep["rows_after"] < rep["rows_before"]
     # only 2 of 5 features ever split: collapse must fire as well
     assert rep["collapsed_columns"] >= 3
-    xb = cm.bin(exp["x"])
+    xb = cm.quantizer.transform(exp["x"])
     np.testing.assert_array_equal(
         np.asarray(cm.engine().raw_margin(xb)), exp["raw_margin"]
     )
@@ -157,7 +157,7 @@ def test_golden_save_load_serve_cold_start(dump, tmp_path):
         [e.tolist() for e in cm.quantizer.edges]
     reg = TableRegistry()
     entry = reg.register("m", loaded)
-    xb = loaded.bin(exp["x"])
+    xb = loaded.quantizer.transform(exp["x"])
     got = np.asarray(entry.engine.predict(xb))
     np.testing.assert_array_equal(
         np.asarray(got, dtype=exp["predict"].dtype), exp["predict"]

@@ -281,16 +281,16 @@ def test_xgb_deep_clustering_golden_save_load_bind(tmp_path):
     # the permuted layout packs both live features into the first tile
     assert (cm.table.feature_occupancy()[2:] == 0).all()
 
-    xb = cm.bin(x)
+    xb = cm.quantizer.transform(x)
     np.testing.assert_array_equal(np.asarray(cm.engine().raw_margin(xb)), record)
 
     cm.save(tmp_path / "art")
     loaded = CompiledModel.load(tmp_path / "art")
     np.testing.assert_array_equal(loaded.table.col_perm, perm)
     np.testing.assert_array_equal(
-        np.asarray(loaded.engine().raw_margin(loaded.bin(x))), record,
+        np.asarray(loaded.engine().raw_margin(loaded.quantizer.transform(x))), record,
     )
-    assert_bit_equal_to_oracle(loaded.table, loaded.bin(x), cfg)
+    assert_bit_equal_to_oracle(loaded.table, loaded.quantizer.transform(x), cfg)
 
 
 _SHARD_CODE = """
@@ -308,7 +308,7 @@ record = np.asarray(exp["raw_margin"], dtype=np.float32)
 
 cm = build(str(dump), cluster_columns=True)
 assert cm.table.col_perm is not None
-xb = cm.bin(x)
+xb = cm.quantizer.transform(x)
 mesh = make_host_mesh()
 out = {{}}
 for spmd in ("shard_map", "gspmd"):
