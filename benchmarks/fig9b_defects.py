@@ -1,20 +1,42 @@
-"""Fig. 9(b): relative accuracy vs memristor/DAC defect rate."""
+"""Fig. 9(b): relative accuracy vs memristor/DAC defect rate.
+
+Extended with the soft-vs-hard degradation study (DESIGN.md §15): both
+engines see IDENTICAL defect draws per (rate, repeat), each is scored
+against its OWN clean-table accuracy (the soft surface carries a small
+constant smoothing offset that is not a defect effect), and the
+``smoothness`` rows record each curve's worst consecutive relative-
+accuracy drop (starting from the clean point 1.0).  The in-module
+assertion — soft's worst drop never exceeds hard's — is the graceful-
+degradation claim the bench gate keeps pinned.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import FAST, budget, trained_model
+from benchmarks.common import budget, trained_model
 from repro.core.compile import compile_ensemble
 from repro.core.defects import (
     inject_query_defects,
     inject_table_defects,
     relative_accuracy,
 )
+from repro.core.deploy import DeployConfig
 from repro.core.engine import XTimeEngine
 from repro.data.tabular import accuracy_metric
 
 FRACS = [0.002, 0.01, 0.05, 0.1]
+# boundary temperature of the soft study, in bin units: wide enough to
+# absorb +-1-level (LSB sub-cell) bound flips, narrow enough to keep the
+# clean-table accuracy at the hard engine's level
+TAU = 0.5
+
+
+def _smoothness(means: list[float]) -> float:
+    """Worst consecutive drop of a relative-accuracy curve, measured
+    from the clean point (rel acc 1.0 at defect rate 0)."""
+    seq = [1.0] + list(means)
+    return max(a - b for a, b in zip(seq, seq[1:]))
 
 
 def run() -> list[dict]:
@@ -25,21 +47,65 @@ def run() -> list[dict]:
         xb = xb_te[:512]
         y = ds.y_test[:512]
         table = compile_ensemble(ens)
-        ideal = accuracy_metric(
+        soft_cfg = DeployConfig(mode="soft", tau=TAU)
+        ideal_h = accuracy_metric(
             ds.task, y, np.asarray(XTimeEngine(table).predict(xb))
         )
+        ideal_s = accuracy_metric(
+            ds.task, y,
+            np.asarray(XTimeEngine(table, config=soft_cfg).predict(xb)),
+        )
+        hard_means: list[float] = []
+        soft_means: list[float] = []
         for frac in FRACS:
-            accs = []
+            h_accs, s_accs = [], []
             for r in range(repeats):
                 rng = np.random.default_rng(1000 * r + 7)
+                # ONE defect draw per repeat, shared by both engines —
+                # the comparison isolates the cell response, not the noise
                 t2 = inject_table_defects(table, frac, rng)
                 q2 = inject_query_defects(xb.astype(np.int32), frac, 256, rng)
-                pred = np.asarray(XTimeEngine(t2).predict(q2))
-                accs.append(accuracy_metric(ds.task, y, pred))
-            mean, std = relative_accuracy(ideal, accs)
+                h_accs.append(accuracy_metric(
+                    ds.task, y, np.asarray(XTimeEngine(t2).predict(q2))
+                ))
+                s_accs.append(accuracy_metric(
+                    ds.task, y,
+                    np.asarray(
+                        XTimeEngine(t2, config=soft_cfg).predict(q2)
+                    ),
+                ))
+            mean, std = relative_accuracy(ideal_h, h_accs)
             rows.append({
                 "name": f"fig9b/{name}/defect_{frac}",
                 "us_per_call": 0.0,
-                "derived": f"rel_acc={mean:.4f};std={std:.4f};ideal={ideal:.4f}",
+                "derived": f"rel_acc={mean:.4f};std={std:.4f};ideal={ideal_h:.4f}",
             })
+            s_mean, s_std = relative_accuracy(ideal_s, s_accs)
+            rows.append({
+                "name": f"fig9b/{name}/soft_defect_{frac}",
+                "us_per_call": 0.0,
+                "derived": (
+                    f"rel_acc={s_mean:.4f};std={s_std:.4f};"
+                    f"ideal={ideal_s:.4f};tau={TAU}"
+                ),
+            })
+            hard_means.append(mean)
+            soft_means.append(s_mean)
+        hs, ss = _smoothness(hard_means), _smoothness(soft_means)
+        # Accuracy on len(y) rows is quantised in steps of 1/len(y); the
+        # worst-consecutive-drop statistic picks the extreme segment of a
+        # 4-point mean curve, so allow two sample flips' worth of relative
+        # accuracy as the noise floor before declaring the claim broken.
+        noise = 2.0 / len(y) / ideal_h
+        assert ss <= hs + noise, (
+            f"{name}: soft (tau={TAU}) degraded LESS smoothly than hard "
+            f"direct (worst drop {ss:.4f} vs {hs:.4f} + noise floor "
+            f"{noise:.4f}) — the graceful-degradation claim of "
+            "DESIGN.md §15 no longer holds"
+        )
+        rows.append({
+            "name": f"fig9b/{name}/smoothness",
+            "us_per_call": 0.0,
+            "derived": f"hard={hs:.4f};soft={ss:.4f};tau={TAU}",
+        })
     return rows

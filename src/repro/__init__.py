@@ -31,6 +31,9 @@ _LAZY = {
     "CompiledModel": "repro.api",
     "DeployConfig": "repro.core.deploy",
     "ChipSpec": "repro.core.compile",
+    # cell-mode registry (hard + soft comparison modes, repro.core.precision)
+    "CellMode": "repro.core.precision",
+    "get_cell_mode": "repro.core.precision",
     # engine + tuning
     "XTimeEngine": "repro.core.engine",
     "autotune_kernel": "repro.core.tune",

@@ -373,7 +373,14 @@ class CompiledModel:
             )
         return self.quantizer.transform(x)
 
-    def predict(self, x: np.ndarray, *, mesh=None, **overrides) -> np.ndarray:
+    def predict(
+        self,
+        x: np.ndarray,
+        *,
+        mesh=None,
+        return_uncertainty: bool = False,
+        **overrides,
+    ) -> np.ndarray:
         """Final predictions for a batch of float (or pre-binned) rows.
 
         The one-call entry point: bins ``x`` with the artifact's attached
@@ -385,12 +392,64 @@ class CompiledModel:
         repeated same-shaped calls reuse the compiled entry.
 
         Returns ``(B,)`` int32 class ids, or float32 values for
-        regression.  For raw per-channel scores use :meth:`raw_margin`;
-        for bulk file scoring use ``repro.score.score_file``.
+        regression.  With ``return_uncertainty=True`` (soft cell mode
+        only — DESIGN.md §15) returns ``(pred, unc)`` where ``unc`` is
+        the ``(B,)`` calibrated leaf-spread uncertainty at each row's
+        predicted channel.  For raw per-channel scores use
+        :meth:`raw_margin`; for class probabilities
+        :meth:`predict_proba`; for bulk file scoring
+        ``repro.score.score_file``.
         """
         q = self._binned(x, "predict")
         eng = self.engine(mesh=mesh, batch_hint=q.shape[0], **overrides)
-        return np.asarray(eng.predict(q))
+        if return_uncertainty and eng.kernel_mode != "soft":
+            raise ValueError(
+                "predict(return_uncertainty=True) requires cell_mode="
+                f"'soft' (this binding runs mode={eng.mode!r}); build or "
+                "bind with DeployConfig(mode='soft')"
+            )
+        pred = np.asarray(eng.predict(q))
+        if not return_uncertainty:
+            return pred
+        u = np.asarray(eng.uncertainty(q))
+        if self.table.task == "regression" or self.table.n_outputs == 1:
+            unc = u[:, 0]
+        else:  # the spread behind the channel that won the argmax
+            unc = u[np.arange(pred.shape[0]), pred.astype(np.int64)]
+        return pred, unc
+
+    def predict_proba(
+        self, x: np.ndarray, *, mesh=None, **overrides
+    ) -> np.ndarray:
+        """Class probabilities for a batch of float (or pre-binned) rows.
+
+        Soft cell mode only: the sigmoid-match margins are a smooth
+        probabilistic surface, so squashing them is meaningful — binary
+        single-logit models return ``(B, 2)`` ``[1-p, p]`` via the
+        sigmoid, multiclass models ``(B, n_classes)`` via the softmax.
+        Hard modes (and regression tasks) raise.
+        """
+        q = self._binned(x, "predict_proba")
+        eng = self.engine(mesh=mesh, batch_hint=q.shape[0], **overrides)
+        if eng.kernel_mode != "soft":
+            raise ValueError(
+                "predict_proba requires cell_mode='soft' (this binding "
+                f"runs mode={eng.mode!r}); build or bind with "
+                "DeployConfig(mode='soft')"
+            )
+        if self.table.task == "regression":
+            raise ValueError(
+                "predict_proba is undefined for regression models; use "
+                "predict(x, return_uncertainty=True) for a value with an "
+                "uncertainty channel"
+            )
+        m = np.asarray(eng.raw_margin(q), dtype=np.float64)
+        if self.table.n_outputs == 1:  # single-logit binary
+            p = 1.0 / (1.0 + np.exp(-m[:, 0]))
+            return np.stack([1.0 - p, p], axis=1).astype(np.float32)
+        z = m - m.max(axis=1, keepdims=True)
+        e = np.exp(z)
+        return (e / e.sum(axis=1, keepdims=True)).astype(np.float32)
 
     def raw_margin(self, x: np.ndarray, *, mesh=None, **overrides) -> np.ndarray:
         """Raw ``(B, n_outputs)`` margins for float (or pre-binned) rows —

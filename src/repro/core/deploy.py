@@ -18,14 +18,21 @@ config.
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
 
+from repro.core.precision import CELL_MODES, get_cell_mode, mode_names
+
 BACKENDS = ("jnp", "pallas")
-MODES = ("direct", "inclusive", "msb_lsb", "two_cycle")
 NOC_CONFIGS = ("auto", "accumulate", "batch", "hybrid")
 SPMD_MODES = ("auto", "gspmd", "shard_map")
-TABLE_DTYPES = ("auto", "uint8", "uint16", "int32")
-FAITHFUL_MODES = ("msb_lsb", "two_cycle")  # bit-faithful aCAM arithmetic
+TABLE_DTYPES = ("auto", "uint8", "uint16", "int32", "float32")
+# every user-facing mode list derives from the CellMode registry
+# (repro.core.precision) — the tuples below are kept as the back-compat
+# names downstream code imports, never hand-enumerated again
+MODES = mode_names()
+FAITHFUL_MODES = tuple(m.name for m in CELL_MODES.values() if m.faithful)
+PACKABLE_MODES = tuple(m.name for m in CELL_MODES.values() if m.packable)
 # table-compression levels (repro.core.compress): 'auto' == 'full'
 COMPRESS_LEVELS = ("off", "prune", "merge", "full", "auto")
 
@@ -57,8 +64,14 @@ class DeployConfig:
       table_dtype: kernel table dtype.  'auto' takes the compile-time
         selection carried on the ``CAMTable`` (uint8 for ≤256 bins,
         uint16 to 65536, int32 beyond); an explicit packed dtype
-        overrides it; the faithful modes ('msb_lsb'/'two_cycle') always
-        run the int32 exclusive-high layout.
+        overrides it; modes with a pinned dtype policy
+        (``CellMode.table_dtype_policy`` — the faithful modes pin the
+        int32 exclusive-high layout, 'soft' pins float32 soft-encoded
+        bounds) always run that layout.
+      tau: boundary temperature of the 'soft' cell mode, in BIN units —
+        the sigmoid width of each cell's match score.  ``0.0`` is the
+        exact hard limit (bit-equal predictions to 'direct'); the
+        default gives gentle sub-bin smoothing.  Ignored by hard modes.
       c_mult: leaf-channel padding multiple (kernel lane packing).
       interpret: run the Pallas kernel in interpret mode.  'auto'
         (default) resolves at engine-bind time: compiled on TPU,
@@ -90,6 +103,7 @@ class DeployConfig:
     r_blk: int = 256
     f_blk: int = 128
     table_dtype: str = "auto"
+    tau: float = 0.1
     c_mult: int = 8
     interpret: bool | str = "auto"
     fuse_epilogue: bool | str = "auto"
@@ -99,8 +113,7 @@ class DeployConfig:
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
             raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
-        if self.mode not in MODES:
-            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        cell = get_cell_mode(self.mode)  # unknown modes list the registry
         if self.noc_config not in NOC_CONFIGS:
             raise ValueError(
                 f"noc_config {self.noc_config!r} not in {NOC_CONFIGS}"
@@ -111,11 +124,25 @@ class DeployConfig:
             raise ValueError(
                 f"table_dtype {self.table_dtype!r} not in {TABLE_DTYPES}"
             )
-        if self.mode in FAITHFUL_MODES and self.table_dtype not in ("auto", "int32"):
+        policy = cell.table_dtype_policy
+        if policy is not None and self.table_dtype not in ("auto", policy):
             raise ValueError(
-                f"mode {self.mode!r} is bit-faithful to the int32 "
-                f"exclusive-high layout; table_dtype={self.table_dtype!r} "
-                "is only available for 'direct'/'inclusive'"
+                f"mode {self.mode!r} pins the {policy!r} table layout; "
+                f"table_dtype={self.table_dtype!r} is only available for "
+                f"modes {PACKABLE_MODES}"
+            )
+        if self.table_dtype == "float32" and not cell.soft:
+            raise ValueError(
+                "table_dtype 'float32' is the soft-encoded layout; it "
+                f"requires mode='soft' (got mode={self.mode!r})"
+            )
+        if not (
+            isinstance(self.tau, (int, float))
+            and math.isfinite(self.tau)
+            and self.tau >= 0.0
+        ):
+            raise ValueError(
+                f"tau must be a finite temperature >= 0, got {self.tau!r}"
             )
         if self.b_blk < 1 or self.r_blk < 1 or self.c_mult < 1:
             raise ValueError("b_blk, r_blk and c_mult must be >= 1")

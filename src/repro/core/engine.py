@@ -52,7 +52,8 @@ except ImportError:  # pragma: no cover - version-dependent import path
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.core.compile import CAMTable
-from repro.core.deploy import FAITHFUL_MODES, DeployConfig
+from repro.core.deploy import DeployConfig
+from repro.core.precision import get_cell_mode
 from repro.kernels import ops as kops
 from repro.kernels.cam_match import default_interpret, pallas_available
 from repro.kernels.ref import cam_match_ref
@@ -63,13 +64,16 @@ _UNSET = object()  # distinguishes "kwarg not passed" from an explicit default
 def resolve_table_dtype(table: CAMTable, config: DeployConfig) -> str:
     """Effective kernel table dtype for this (table, config) binding.
 
-    The faithful cell modes emulate the paper's macro-cell arithmetic on
-    the int32 exclusive-high layout; otherwise 'auto' takes the
+    Modes with a pinned ``CellMode.table_dtype_policy`` always run that
+    layout (int32 exclusive-high for the bit-faithful macro-cell modes,
+    float32 soft-encoded bounds for 'soft' — ``DeployConfig`` rejects
+    conflicting explicit dtypes); otherwise 'auto' takes the
     compile-time selection carried on the table, and an explicit packed
     dtype must actually hold the grid (inclusive bounds -> n_bins-1).
     """
-    if config.mode in FAITHFUL_MODES:
-        return "int32"  # DeployConfig rejects explicit packed + faithful
+    policy = get_cell_mode(config.mode).table_dtype_policy
+    if policy is not None:
+        return policy
     dt = table.table_dtype if config.table_dtype == "auto" else config.table_dtype
     if dt != "int32" and table.n_bins - 1 > np.iinfo(dt).max:
         raise ValueError(
@@ -221,10 +225,16 @@ class XTimeEngine:
         # compare with the 'inclusive' cell, bit-equal to 'direct' on the
         # exclusive layout; the faithful modes stay on int32.
         self.table_dtype = resolve_table_dtype(table, config)
-        if np.dtype(self.table_dtype).kind == "u":
+        if get_cell_mode(config.mode).soft:
+            self.kernel_mode = "soft"
+        elif np.dtype(self.table_dtype).kind == "u":
             self.kernel_mode = "inclusive"
         else:
             self.kernel_mode = config.mode
+        # soft-mode boundary temperature — static (selects the trace);
+        # pinned to 0.0 for hard modes so they share one jit cache entry
+        # regardless of the config's tau knob
+        self.tau = float(config.tau) if self.kernel_mode == "soft" else 0.0
         # kernel v3 fused epilogue: the base-score add rides the kernel's
         # last feature tile.  Only the single-device pallas path is
         # eligible — under a row-sharded mesh the per-shard partials are
@@ -298,6 +308,26 @@ class XTimeEngine:
             if self.fuse_epilogue
             else None
         )
+        # soft mode's uncertainty channel (DESIGN.md §15): a SEPARATE
+        # moments leaf matrix [leaf, leaf^2, mass] scattered per output
+        # channel.  One extra kernel pass over it yields the raw weighted
+        # sums (m1, m2, mass) the leaf-spread uncertainty derives from —
+        # keeping the margin/predict path on the plain leaf matrix, whose
+        # operand shapes (and therefore float reduction order, and the
+        # tau->0 bit-equality with 'direct') stay identical to the hard
+        # modes.  Bias is never fused into this pass.
+        self._moments = None
+        if self.kernel_mode == "soft":
+            lm = np.asarray(table.leaf_matrix(), dtype=np.float32)  # (R, C)
+            R, C = lm.shape
+            onehot = np.zeros_like(lm)
+            cls = np.asarray(table.class_id, dtype=np.int64) % max(1, C)
+            onehot[np.arange(R), cls] = 1.0  # row mass per output channel
+            m = np.concatenate([lm, lm * lm, onehot], axis=1)  # (R, 3C)
+            c3_pad = -(-3 * C // config.c_mult) * config.c_mult
+            m_pad = np.zeros((self.arrays.r_pad, c3_pad), dtype=np.float32)
+            m_pad[:R, : 3 * C] = m
+            self._moments = jnp.asarray(m_pad)
         if mesh is not None:
             self._place_on_mesh()
         self._fn_cache: dict = {}
@@ -335,16 +365,22 @@ class XTimeEngine:
         self.arrays.leaf = jax.device_put(self.arrays.leaf, rs)
         # the tile-activity mask shards with the rows it describes
         self.arrays.tile_mask = jax.device_put(self.arrays.tile_mask, rs)
+        if self._moments is not None:  # soft moments shard like the leaves
+            self._moments = jax.device_put(self._moments, rs)
 
     # -- compute -----------------------------------------------------------
 
-    def _kernel_fn(self) -> Callable:
+    def _kernel_fn(self, bias=_UNSET) -> Callable:
         """(q, low, high, leaf, mask) -> (B, C_pad) raw accumulated leaf
         sums over the rows it is handed — no epilogue, no collectives.
-        Under shard_map the operands (and B/R) are per-shard."""
-        backend, mode = self.backend, self.kernel_mode
+        Under shard_map the operands (and B/R) are per-shard.  ``bias``
+        defaults to the engine's fused-epilogue row; the moments path
+        passes None (no base score belongs in the raw moment sums)."""
+        backend, mode, tau = self.backend, self.kernel_mode, self.tau
         b_blk, r_blk, f_blk = self.b_blk, self.r_blk, self.f_blk
-        interpret, bias = self.interpret, self._bias
+        interpret = self.interpret
+        if bias is _UNSET:
+            bias = self._bias
 
         def kernel(q, low, high, leaf, mask):
             if backend == "pallas":
@@ -352,9 +388,9 @@ class XTimeEngine:
                     q, low, high, leaf, mask, bias,
                     out_b=q.shape[0], out_c=leaf.shape[1],
                     b_blk=b_blk, r_blk=r_blk, f_blk=f_blk,
-                    mode=mode, interpret=interpret,
+                    mode=mode, interpret=interpret, tau=tau,
                 )
-            return cam_match_ref(q, low, high, leaf, mode=mode)
+            return cam_match_ref(q, low, high, leaf, mode=mode, tau=tau)
 
         return kernel
 
@@ -391,6 +427,16 @@ class XTimeEngine:
         replicated output of 'accumulate').
         """
         kernel, epilogue = self._kernel_fn(), self._epilogue_fn()
+        reduced = self._reduced_fn(kernel)
+        return lambda q, low, high, leaf, mask: epilogue(
+            reduced(q, low, high, leaf, mask)
+        )
+
+    def _reduced_fn(self, kernel: Callable) -> Callable:
+        """Wrap ``kernel`` with the cross-core reduction program: under
+        ``spmd='shard_map'`` the NoC plan's explicit collectives, plain
+        pass-through otherwise.  Shared by the margin and moments paths —
+        both are row sums, so the same router program applies."""
         if self.mesh is not None and self.spmd == "shard_map":
             noc, row_axis = self.noc_config, self.row_axis
 
@@ -407,31 +453,38 @@ class XTimeEngine:
                 return out
 
             qs, rs = self._batch_spec(), self._row_spec()
-            mapped = _wrap_shard_map(body, self.mesh, (qs, rs, rs, rs, rs), qs)
-            return lambda q, low, high, leaf, mask: epilogue(
-                mapped(q, low, high, leaf, mask)
-            )
-        return lambda q, low, high, leaf, mask: epilogue(
-            kernel(q, low, high, leaf, mask)
-        )
+            return _wrap_shard_map(body, self.mesh, (qs, rs, rs, rs, rs), qs)
+        return kernel
 
     def _jitted(self, key: str, donate: bool = False) -> Callable:
         cache_key = (key, donate)
         if cache_key in self._fn_cache:
             return self._fn_cache[cache_key]
-        margin = self._margin_fn()
-        want_pred = key == "predict"
         table = self.table
+        if key == "moments":
+            # soft uncertainty channel: the same reduced kernel run over
+            # the (R_pad, 3C) moments matrix instead of the leaves, with
+            # no bias (a base score has no place in raw moment sums) and
+            # an epilogue that only strips the channel padding
+            reduced = self._reduced_fn(self._kernel_fn(bias=None))
+            n3 = 3 * table.n_outputs
 
-        def fn(q, low, high, leaf, mask):
-            m = margin(q, low, high, leaf, mask)
-            if not want_pred:
-                return m
-            if table.task == "regression":
-                return m[:, 0]
-            if table.n_outputs == 1:  # single-logit binary: sign test
-                return (m[:, 0] > 0.0).astype(jnp.int32)
-            return jnp.argmax(m, axis=1).astype(jnp.int32)
+            def fn(q, low, high, leaf, mask):
+                return reduced(q, low, high, leaf, mask)[:, :n3]
+
+        else:
+            margin = self._margin_fn()
+            want_pred = key == "predict"
+
+            def fn(q, low, high, leaf, mask):
+                m = margin(q, low, high, leaf, mask)
+                if not want_pred:
+                    return m
+                if table.task == "regression":
+                    return m[:, 0]
+                if table.n_outputs == 1:  # single-logit binary: sign test
+                    return (m[:, 0] > 0.0).astype(jnp.int32)
+                return jnp.argmax(m, axis=1).astype(jnp.int32)
 
         # The serving path donates the query buffer: each coalesced batch is
         # a freshly padded array that is dead after the call, so XLA may
@@ -504,6 +557,45 @@ class XTimeEngine:
         q = self._prep_queries(q_bins)
         a = self.arrays
         return self._jitted("predict")(q, a.low, a.high, a.leaf, a.tile_mask)[:B]
+
+    # -- soft-mode uncertainty channel (DESIGN.md §15) -----------------------
+
+    def raw_moments(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+        """(B, 3*n_outputs) raw soft moments ``[m1 | m2 | mass]``.
+
+        Per output channel c: ``m1 = sum_r s_r * leaf[r, c]``,
+        ``m2 = sum_r s_r * leaf[r, c]^2`` and ``mass = sum_r s_r`` over
+        the rows routed to c, with s_r the row's soft match score — the
+        weighted leaf-value moments the spread/uncertainty derives from.
+        Soft engines only."""
+        if self._moments is None:
+            raise ValueError(
+                "raw_moments/uncertainty require the soft cell mode "
+                f"(this engine runs mode={self.mode!r}); rebind with "
+                "DeployConfig(mode='soft')"
+            )
+        B = q_bins.shape[0]
+        q = self._prep_queries(q_bins)
+        a = self.arrays
+        out = self._jitted("moments")(
+            q, a.low, a.high, self._moments, a.tile_mask
+        )
+        return out[:B]
+
+    def uncertainty(self, q_bins: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+        """(B, n_outputs) calibrated uncertainty: the score-weighted
+        population spread (std) of the leaf values behind each output
+        channel.  At tau=0 exactly one row per tree matches, every
+        weight is 0/1 and the spread is the honest across-tree
+        disagreement; finite tau additionally counts boundary ambiguity
+        (several leaves of one tree sharing a query's weight)."""
+        m = np.asarray(self.raw_moments(q_bins), dtype=np.float64)
+        C = self.table.n_outputs
+        m1, m2, mass = m[:, :C], m[:, C : 2 * C], m[:, 2 * C : 3 * C]
+        mass = np.maximum(mass, 1e-12)  # empty channels -> 0 spread, not NaN
+        mean = m1 / mass
+        var = np.maximum(m2 / mass - mean * mean, 0.0)
+        return jnp.asarray(np.sqrt(var, dtype=np.float64).astype(np.float32))
 
     # -- bucketed serving path ----------------------------------------------
 

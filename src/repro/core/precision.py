@@ -17,12 +17,21 @@ are property-tested against the direct comparison ``(T_L <= q) & (q < T_H)``
 over the full 8-bit space.
 
 All functions are pure jnp and vectorize over arbitrary leading shapes, so
-they drop into the engine / Pallas kernel as an alternate match mode.
+they drop into the engine / Pallas kernel as an alternate match mode.  jax
+is imported lazily (inside the match functions, at trace time) so this
+module — home of the :class:`CellMode` registry ``DeployConfig`` resolves
+through — keeps artifact load/inspect paths jax-free.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Callable
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    import jax.numpy as jnp
 
 M_BITS = 4
 M_LEVELS = 1 << M_BITS  # 16 analog levels per sub-cell
@@ -30,12 +39,16 @@ M_LEVELS = 1 << M_BITS  # 16 analog levels per sub-cell
 
 def split_msb_lsb(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """v in [0, 256) -> (v >> 4, v & 15), each an M-bit quantity."""
+    import jax.numpy as jnp
+
     v = v.astype(jnp.int32)
     return v >> M_BITS, v & (M_LEVELS - 1)
 
 
 def match_direct(q: jnp.ndarray, t_low: jnp.ndarray, t_high: jnp.ndarray) -> jnp.ndarray:
     """The ideal 8-bit comparison the macro-cell must reproduce."""
+    import jax.numpy as jnp
+
     q = q.astype(jnp.int32)
     return (t_low.astype(jnp.int32) <= q) & (q < t_high.astype(jnp.int32))
 
@@ -77,6 +90,8 @@ def match_two_cycle(q: jnp.ndarray, t_low: jnp.ndarray, t_high: jnp.ndarray) -> 
     Because the MAL can only be discharged, the state after cycle 2 is the
     AND of both cycles' evaluations, which equals Eq. 3.
     """
+    import jax.numpy as jnp
+
     qm, ql = split_msb_lsb(q)
     tlm, tll = split_msb_lsb(t_low)
     thm, thl = split_msb_lsb(t_high)
@@ -113,3 +128,153 @@ def macro_cell_count(n_features: int, n_bits: int = 8) -> int:
     if n_bits <= 2 * M_BITS:
         return 2 * n_features  # the paper's macro-cell
     raise ValueError(">8-bit thresholds are out of the paper's design space")
+
+
+# ---------------------------------------------------------------------------
+# Soft-boundary cell mode (analog sigmoid match lines, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+#
+# The MoS₂ analog-CAM line of work shows the aCAM match line is not a step
+# function: near a stored threshold the discharge is sigmoid-shaped.  The
+# 'soft' cell mode models that physics — each cell scores
+#
+#     s(q) = sigmoid((q - low_f) / tau) * sigmoid((high_f - q) / tau)
+#
+# with the bounds pre-encoded at HALF-INTEGER offsets (low_f = low - 0.5,
+# high_f = high - 0.5, see ``encode_soft_bounds``) so the tau -> 0 limit is
+# EXACTLY the hard exclusive-high indicator ``low <= q < high`` on integer
+# bins: the sigmoid arguments are never zero at the limit, so no boundary
+# bin can round differently from the hard compare.  Rows aggregate by
+# product of cells — accumulated as a SUM of log-scores (the running-AND's
+# additive twin), which is what the Pallas kernel carries in its scratch.
+#
+# Wildcard cells encode (-inf, +inf): ``log_sigmoid(+inf) == 0.0`` exactly,
+# so an all-wildcard tile contributes log-score 0 and the kernel's tile
+# skipping stays valid.  Never-match cells (padding rows) encode
+# (+inf, -inf) -> log-score -inf -> row score exactly 0.  Every log-score
+# is <= 0, so the accumulated sum never produces NaN.
+
+
+def encode_soft_bounds(
+    low, high, n_bins: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Int bounds -> the float32 half-integer soft encoding (host-side ok).
+
+    Maps the canonical exclusive-high int32 layout onto the soft cell's
+    native float32 form: real cells at ``(low - 0.5, high - 0.5)``,
+    wildcard cells (the full grid ``[0, n_bins)``) at ``(-inf, +inf)`` and
+    never-match cells (``high <= low``, e.g. row padding's low=1/high=0)
+    at ``(+inf, -inf)``.
+    """
+    low = np.asarray(low, dtype=np.int64)
+    high = np.asarray(high, dtype=np.int64)
+    lo_f = (low - 0.5).astype(np.float32)
+    hi_f = (high - 0.5).astype(np.float32)
+    wildcard = (low <= 0) & (high >= n_bins)
+    never = high <= low
+    lo_f[wildcard], hi_f[wildcard] = -np.inf, np.inf
+    lo_f[never], hi_f[never] = np.inf, -np.inf
+    return lo_f, hi_f
+
+
+def soft_cell_logscore(
+    q: jnp.ndarray, low_f: jnp.ndarray, high_f: jnp.ndarray, tau: float
+) -> jnp.ndarray:
+    """Per-cell log match score on soft-encoded float32 bounds.
+
+    ``tau`` is the boundary temperature in BIN units (static — it selects
+    the trace, not a runtime operand).  ``tau == 0`` is the exact hard
+    limit: log 1 inside ``(low_f, high_f)``, -inf outside; the encoding's
+    half-integer offsets guarantee an integer bin never lands ON a bound.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    q = q.astype(jnp.float32)
+    if tau == 0.0:
+        inside = (q > low_f) & (q < high_f)
+        return jnp.where(inside, jnp.float32(0.0), -jnp.inf)
+    inv = jnp.float32(1.0 / tau)
+    return jax.nn.log_sigmoid((q - low_f) * inv) + jax.nn.log_sigmoid(
+        (high_f - q) * inv
+    )
+
+
+def soft_match_scores(
+    q: jnp.ndarray,  # (B, F) float32 (or int bins; cast internally)
+    low_f: jnp.ndarray,  # (R, F) soft-encoded float32 bounds
+    high_f: jnp.ndarray,
+    tau: float,
+) -> jnp.ndarray:
+    """(B, R) row match scores in [0, 1]: exp of the summed log-scores."""
+    import jax.numpy as jnp
+
+    logs = soft_cell_logscore(
+        q[:, None, :], low_f[None, :, :], high_f[None, :, :], tau
+    )
+    return jnp.exp(jnp.sum(logs, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# CellMode registry: the one place a cell mode's contract lives
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CellMode:
+    """Descriptor for one aCAM cell comparison mode.
+
+    Attributes:
+      name: the ``DeployConfig.mode`` string.
+      match: the cell-level jnp comparison ``(q, low, high) -> bool`` the
+        kernel and reference dispatch on — ``None`` for the soft mode,
+        whose scoring is parametric in tau (``soft_cell_logscore``).
+      table_dtype_policy: the dtype this mode PINS its kernel tables to
+        (``'int32'`` for the bit-faithful macro-cell modes, ``'float32'``
+        for soft), or ``None`` when the mode accepts the compile-selected
+        / packed layouts.
+      faithful: bit-faithful aCAM macro-cell arithmetic (Eq. 3 / Table I).
+      packable: may run the packed unsigned inclusive-high table layout
+        (the kernel-v2 compact encoding).
+      soft: numeric sigmoid match scores instead of a boolean match line.
+    """
+
+    name: str
+    match: Callable | None
+    table_dtype_policy: str | None
+    faithful: bool
+    packable: bool
+    soft: bool = False
+
+
+CELL_MODES: dict[str, CellMode] = {
+    m.name: m
+    for m in (
+        CellMode("direct", match_direct, None, faithful=False, packable=True),
+        CellMode(
+            "inclusive", match_inclusive, None, faithful=False, packable=True
+        ),
+        CellMode("msb_lsb", match_msb_lsb, "int32", faithful=True, packable=False),
+        CellMode(
+            "two_cycle", match_two_cycle, "int32", faithful=True, packable=False
+        ),
+        CellMode(
+            "soft", None, "float32", faithful=False, packable=False, soft=True
+        ),
+    )
+}
+
+
+def mode_names() -> tuple[str, ...]:
+    """Registered cell-mode names, registration order (user-facing lists)."""
+    return tuple(CELL_MODES)
+
+
+def get_cell_mode(name: str) -> CellMode:
+    """Resolve a mode name; unknown names list what IS registered."""
+    try:
+        return CELL_MODES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown cell mode {name!r}; registered modes: {mode_names()}"
+        ) from None

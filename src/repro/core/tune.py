@@ -25,7 +25,8 @@ from dataclasses import asdict, dataclass, field
 import numpy as np
 
 from repro.core.compile import CAMTable
-from repro.core.deploy import FAITHFUL_MODES, DeployConfig
+from repro.core.deploy import DeployConfig
+from repro.core.precision import get_cell_mode
 from repro.core.quantize import FeatureQuantizer
 from repro.core.trees import Ensemble, GBDTParams, RFParams, train_gbdt, train_rf
 from repro.data.tabular import TabularDataset, accuracy_metric
@@ -41,10 +42,13 @@ TUNE_SCHEMA_VERSION = 2
 
 def kernel_version(table_dtype: str) -> str:
     """Kernel generation a resolved table dtype binds: the v1 int32
-    exclusive-high layout, or the v2 packed inclusive-high layout
-    (uint8/uint16).  The autotuner's dispatch table records this per
+    exclusive-high layout, the v2 packed inclusive-high layout
+    (uint8/uint16), or the float32 soft-encoded layout ('soft', running
+    log-sum scratch).  The autotuner's dispatch table records this per
     batch bucket — the measured winner, not a size heuristic."""
-    return "v1" if table_dtype == "int32" else "v2"
+    if table_dtype == "int32":
+        return "v1"
+    return "soft" if np.dtype(table_dtype).kind == "f" else "v2"
 
 
 @dataclass
@@ -305,19 +309,20 @@ def autotune_kernel(
     deploy = deploy or DeployConfig()
 
     if modes is None:
-        # faithful base modes are a deliberate choice — keep them; the fast
-        # modes sweep both int-compare flavours
-        modes = (deploy.mode,) if deploy.mode in FAITHFUL_MODES else (
-            "direct", "inclusive",
-        )
+        # dtype-pinned modes (the faithful macro-cell modes, 'soft') are a
+        # deliberate semantic choice — keep them; the packable fast modes
+        # sweep both int-compare flavours
+        modes = ("direct", "inclusive") if get_cell_mode(deploy.mode).packable \
+            else (deploy.mode,)
     if table_dtypes is None:
         table_dtypes = ("auto", "int32")
 
     seen: set[tuple] = set()
     candidates: list[DeployConfig] = []
     for mode in modes:
+        policy = get_cell_mode(mode).table_dtype_policy
         for dt in table_dtypes:
-            if mode in FAITHFUL_MODES and dt not in ("auto", "int32"):
+            if policy is not None and dt not in ("auto", policy):
                 continue
             cfg = deploy.replace(mode=mode, table_dtype=dt)
             resolved = resolve_table_dtype(table, cfg)

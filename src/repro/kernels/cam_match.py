@@ -32,8 +32,17 @@ The ``mode`` switch selects the cell-level comparison:
   'direct'    — ideal 8/16-bit compare on exclusive-high int32 tables,
   'inclusive' — the packed-table compare (low <= q <= high, native dtype),
   'msb_lsb'   — the paper's Eq. 3 macro-cell arithmetic (faithful mode),
-  'two_cycle' — Table-I cycle-accurate discharge semantics.
-All are bit-equivalent on equivalently-encoded tables (property-tested).
+  'two_cycle' — Table-I cycle-accurate discharge semantics,
+  'soft'      — sigmoid match SCORES on float32 soft-encoded tables
+                (DESIGN.md §15): the scratch carries a running SUM of
+                per-cell log-scores (the additive twin of the running
+                AND; a skipped all-wildcard tile adds exactly 0), and
+                the final exp lands on the MXU dot as the (B_blk, R_blk)
+                score matrix.  ``tau`` (static, bin units) sets the
+                boundary temperature; tau=0 is the exact hard indicator,
+                bit-equal to 'direct' margins at identical tile sizes.
+The four hard modes are bit-equivalent on equivalently-encoded tables
+(property-tested); 'soft' at tau=0 joins that equivalence class.
 """
 
 from __future__ import annotations
@@ -89,6 +98,7 @@ def _cam_match_kernel(
     n_f_tiles: int,
     n_r_tiles: int,
     fuse_bias: bool,
+    tau: float,
 ):
     if fuse_bias:
         bias_ref, out_ref, acc_ref = refs
@@ -97,24 +107,36 @@ def _cam_match_kernel(
         bias_ref = None
     j = pl.program_id(1)
     k = pl.program_id(2)
-    cell = _CELL_MATCH[mode]
+    soft = mode == "soft"
+    cell = None if soft else _CELL_MATCH[mode]
 
     @pl.when(k == 0)
     def _precharge():  # the match line starts charged (all-match)
-        acc_ref[...] = jnp.ones_like(acc_ref[...])
+        if soft:  # log-score 0 == score 1 (the charged analog line)
+            acc_ref[...] = jnp.zeros_like(acc_ref[...])
+        else:
+            acc_ref[...] = jnp.ones_like(acc_ref[...])
 
     @pl.when(mask_ref[0, 0] != 0)
     def _compare():  # skipped for all-wildcard tiles (they match everything)
         q = q_ref[...][:, None, :]  # (B_blk, 1, f_blk)
         lo = low_ref[...][None, :, :]  # (1, R_blk, f_blk)
         hi = high_ref[...][None, :, :]
-        ok = jnp.all(cell(q, lo, hi), axis=-1)  # (B_blk, R_blk)
-        acc_ref[...] = acc_ref[...] & ok.astype(jnp.int32)
+        if soft:
+            logs = precision.soft_cell_logscore(q, lo, hi, tau)
+            acc_ref[...] += jnp.sum(logs, axis=-1)  # (B_blk, R_blk)
+        else:
+            ok = jnp.all(cell(q, lo, hi), axis=-1)  # (B_blk, R_blk)
+            acc_ref[...] = acc_ref[...] & ok.astype(jnp.int32)
 
     @pl.when(k == n_f_tiles - 1)
     def _accumulate():  # MXU leaf gather once the match line is final
+        match = (
+            jnp.exp(acc_ref[...]) if soft
+            else acc_ref[...].astype(jnp.float32)
+        )
         partial = jax.lax.dot(
-            acc_ref[...].astype(jnp.float32),
+            match,
             leaf_ref[...],
             preferred_element_type=jnp.float32,
         )  # (B_blk, C_pad)
@@ -151,7 +173,7 @@ def full_tile_mask(n_r_tiles: int, n_f_tiles: int) -> jnp.ndarray:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("b_blk", "r_blk", "f_blk", "mode", "interpret"),
+    static_argnames=("b_blk", "r_blk", "f_blk", "mode", "interpret", "tau"),
 )
 def cam_match_pallas(
     q: jnp.ndarray,  # (B, F_pad) table dtype — pre-padded (see ops.py)
@@ -166,6 +188,7 @@ def cam_match_pallas(
     f_blk: int = F_CHUNK,
     mode: str = "direct",
     interpret: bool | None = None,
+    tau: float = 0.0,
 ) -> jnp.ndarray:
     """(B, C_pad) accumulated logits.  All dims must divide their blocks.
 
@@ -210,7 +233,7 @@ def cam_match_pallas(
     grid = (B // b_blk, R // r_blk, n_f_tiles)
     kernel = functools.partial(
         _cam_match_kernel, mode=mode, n_f_tiles=n_f_tiles,
-        n_r_tiles=n_r_tiles, fuse_bias=bias is not None,
+        n_r_tiles=n_r_tiles, fuse_bias=bias is not None, tau=float(tau),
     )
 
     if not pallas_available():  # pragma: no cover - jaxlib-build dependent
@@ -220,7 +243,10 @@ def cam_match_pallas(
         )
     from jax.experimental.pallas import tpu as pltpu
 
-    scratch = [pltpu.VMEM((b_blk, r_blk), jnp.int32)]
+    # the running accumulator: wired-AND bits for the hard modes, the
+    # running log-score sum for 'soft'
+    acc_dtype = jnp.float32 if mode == "soft" else jnp.int32
+    scratch = [pltpu.VMEM((b_blk, r_blk), acc_dtype)]
     compiler_params = None
     if not interpret:
         try:

@@ -91,8 +91,20 @@ def pack_tables(
     An unsigned dtype additionally requires every table value to fit its
     range — compile-generated tables always do (high >= low+1 >= 1);
     perturbed ones (defect injection) must use the int32 layout.
+
+    ``dtype='float32'`` is the SOFT cell layout instead: half-integer
+    bounds with wildcard cells at (-inf, +inf) and never-match cells at
+    (+inf, -inf) (``precision.encode_soft_bounds``), padded with the
+    same always-match columns / never-match rows semantics.  Returned
+    with ``inclusive=False`` (the soft compare is open-interval on the
+    shifted bounds, the exclusive-high family).
     """
     dt = np.dtype(dtype)
+    if dt.kind == "f":
+        return _pack_tables_soft(
+            low, high, leaf_matrix,
+            r_blk=r_blk, c_mult=c_mult, n_bins=n_bins, f_blk=f_blk,
+        )
     if inclusive is None:
         inclusive = dt.kind == "u"
     if dt.kind == "u" and not inclusive:
@@ -131,6 +143,31 @@ def pack_tables(
     return lo.astype(out_dt), hi.astype(out_dt), lm, inclusive
 
 
+def _pack_tables_soft(
+    low: np.ndarray,
+    high: np.ndarray,
+    leaf_matrix: np.ndarray,
+    *,
+    r_blk: int,
+    c_mult: int,
+    n_bins: int | None,
+    f_blk: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, bool]:
+    """The float32 soft-mode layout: pad in the canonical int32 form,
+    then apply ``precision.encode_soft_bounds`` so padding columns become
+    exact wildcards (log-score 0) and padding rows exact never-matches
+    (score 0) — no soft weight ever leaks out of the real table."""
+    from repro.core.precision import encode_soft_bounds
+
+    bins = int(n_bins) if n_bins is not None else (int(high.max(initial=0)) + 1)
+    lo, hi, lm = pad_tables(
+        low, high, leaf_matrix,
+        r_blk=r_blk, c_mult=c_mult, n_bins=bins, f_blk=f_blk,
+    )
+    lo_f, hi_f = encode_soft_bounds(lo, hi, bins)
+    return lo_f, hi_f, lm, False
+
+
 def wildcard_tile_mask(
     low: np.ndarray,
     high: np.ndarray,
@@ -144,14 +181,20 @@ def wildcard_tile_mask(
 
     Operates on PADDED (and possibly packed) tables: a wildcard cell is
     the full range [0, n_bins) in whichever encoding ``inclusive``
-    names.  Never-match padding rows are not wildcards, so their tiles
-    stay active and keep their rows unmatchable.
+    names; on float32 soft-encoded tables it is the exact (-inf, +inf)
+    cell (log-score 0, so a skipped tile contributes nothing to the
+    kernel's running log-sum — skipping stays semantics-free).
+    Never-match padding rows are not wildcards, so their tiles stay
+    active and keep their rows unmatchable.
     """
     R, F = low.shape
     if R % r_blk or F % f_blk:
         raise ValueError(f"padded shape ({R}, {F}) must tile by ({r_blk}, {f_blk})")
-    top = n_bins - 1 if inclusive else n_bins
-    act = ~((low.astype(np.int64) == 0) & (high.astype(np.int64) >= top))
+    if np.dtype(low.dtype).kind == "f":
+        act = ~(np.isneginf(low) & np.isposinf(high))
+    else:
+        top = n_bins - 1 if inclusive else n_bins
+        act = ~((low.astype(np.int64) == 0) & (high.astype(np.int64) >= top))
     tiles = act.reshape(R // r_blk, r_blk, F // f_blk, f_blk).any(axis=(1, 3))
     return tiles.astype(np.int32)
 
@@ -215,6 +258,7 @@ def pad_to_bucket(
     jax.jit,
     static_argnames=(
         "b_blk", "r_blk", "f_blk", "mode", "interpret", "out_b", "out_c",
+        "tau",
     ),
 )
 def cam_match(
@@ -232,16 +276,20 @@ def cam_match(
     f_blk: int = F_CHUNK,
     mode: str = "direct",
     interpret: bool | None = None,
+    tau: float = 0.0,
 ) -> jnp.ndarray:
     """Kernel entry on pre-padded operands; returns unpadded (out_b, out_c).
 
     ``bias`` is the optional (1, C_pad) fused-epilogue row added inside
     the kernel on each output tile's last visit (kernel v3); callers
-    fusing it must NOT add the base score again downstream.
+    fusing it must NOT add the base score again downstream.  ``tau`` is
+    the soft-mode temperature (static, like ``mode`` — it selects the
+    compiled trace); hard modes ignore it.
     """
     out = cam_match_pallas(
         q_padded, low, high, leaf, tile_mask, bias,
         b_blk=b_blk, r_blk=r_blk, f_blk=f_blk, mode=mode, interpret=interpret,
+        tau=tau,
     )
     return out[:out_b, :out_c]
 

@@ -18,14 +18,26 @@ from repro.core import precision
 
 
 def cam_match_ref(
-    q: jnp.ndarray,  # (B, F) integer bins
+    q: jnp.ndarray,  # (B, F) integer bins (float32 for mode='soft')
     low: jnp.ndarray,  # (R, F) inclusive lower bin bounds
     high: jnp.ndarray,  # (R, F) exclusive upper bin bounds
     leaf_matrix: jnp.ndarray,  # (R, C) leaf values routed to class channels
     *,
-    mode: str = "direct",  # 'direct' | 'msb_lsb' | 'two_cycle'
+    mode: str = "direct",  # any repro.core.precision.CELL_MODES name
+    tau: float = 0.0,  # soft-mode boundary temperature (ignored otherwise)
 ) -> jnp.ndarray:
-    """Returns (B, C) accumulated logits/votes."""
+    """Returns (B, C) accumulated logits/votes.
+
+    ``mode='soft'`` expects the float32 soft-encoded bounds
+    (``precision.encode_soft_bounds``) and aggregates sigmoid match
+    SCORES instead of a boolean match line — the (B, R) score matrix
+    multiplies the leaf matrix exactly like the hard 0/1 match, so at
+    ``tau=0`` the two paths are the same dot product over the same
+    operand shapes (bit-equal margins).
+    """
+    if mode == "soft":
+        match = precision.soft_match_scores(q, low, high, tau)  # (B, R)
+        return match @ leaf_matrix  # (B, C)
     qe = q[:, None, :].astype(jnp.int32)  # (B, 1, F)
     lo = low[None, :, :].astype(jnp.int32)  # (1, R, F)
     hi = high[None, :, :].astype(jnp.int32)
@@ -40,7 +52,9 @@ def cam_match_ref(
     elif mode == "two_cycle":
         cell = precision.match_two_cycle(qe, lo, hi)
     else:
-        raise ValueError(f"unknown mode {mode!r}")
+        raise ValueError(
+            f"unknown mode {mode!r}; registered modes: {precision.mode_names()}"
+        )
     match = jnp.all(cell, axis=-1)  # (B, R) — the MAL wired-AND over columns
     return match.astype(leaf_matrix.dtype) @ leaf_matrix  # (B, C)
 

@@ -171,27 +171,40 @@ def assert_bit_equal_to_oracle(
 
     Binds ``deploy`` on ``table`` and asserts its margins are
 
-      1. BIT-EQUAL to the same-backend v1 int32 engine (fused epilogue
-         off, same tile sizes → identical float32 reduction order), and
-      2. within 1 ULP of the jnp reference engine.
+      1. BIT-EQUAL to the same-backend engine on the mode's CANONICAL
+         table layout with the fused epilogue off (the registry's pinned
+         ``table_dtype_policy``, int32 for the hard modes — same tile
+         sizes → identical float32 reduction order), and
+      2. within 1 ULP of the jnp reference engine (mode='soft' compares
+         against the jnp soft engine at the SAME tau; every hard mode
+         against the jnp 'direct' int32 engine).
 
     Returns the candidate margins for further assertions.
     """
+    from repro.core.precision import get_cell_mode
+
     candidate = XTimeEngine.from_config(table, deploy)
     m = np.asarray(candidate.raw_margin(queries))
 
+    policy = get_cell_mode(deploy.mode).table_dtype_policy
     v1 = XTimeEngine.from_config(
-        table, deploy.replace(table_dtype="int32", fuse_epilogue=False),
+        table,
+        deploy.replace(table_dtype=policy or "int32", fuse_epilogue=False),
     )
     np.testing.assert_array_equal(m, np.asarray(v1.raw_margin(queries)))
 
-    ref = XTimeEngine.from_config(
-        table,
-        DeployConfig(
+    if get_cell_mode(deploy.mode).soft:
+        ref_cfg = DeployConfig(
+            backend="jnp", mode="soft", tau=deploy.tau,
+            table_dtype="float32",
+            b_blk=deploy.b_blk, r_blk=deploy.r_blk, f_blk=deploy.f_blk,
+        )
+    else:
+        ref_cfg = DeployConfig(
             backend="jnp", mode="direct", table_dtype="int32",
             b_blk=deploy.b_blk, r_blk=deploy.r_blk, f_blk=deploy.f_blk,
-        ),
-    )
+        )
+    ref = XTimeEngine.from_config(table, ref_cfg)
     np.testing.assert_allclose(
         m, np.asarray(ref.raw_margin(queries)), rtol=1e-6, atol=1e-7,
     )

@@ -1,0 +1,359 @@
+"""Soft-boundary cell mode (DESIGN.md §15): per-cell sigmoid match
+scores with temperature tau, aggregated in log space, behind the
+first-class ``CellMode`` registry.
+
+The correctness contract has two halves:
+
+  * tau=0 is the EXACT hard limit — margins and predictions are
+    BIT-EQUAL to mode='direct' on both backends (the half-integer bound
+    offsets guarantee no integer bin ever lands on a boundary, and the
+    margin path multiplies the same plain leaf matrix in the same float
+    order);
+  * finite tau passes the shared differential-oracle gate
+    (tests/oracles.py): pallas vs the jnp soft reference within 1 ULP.
+
+Plus the uncertainty channel (score-weighted leaf spread via the
+moments pass), the probability surface (``CompiledModel.predict_proba``),
+and the registry-driven error surfaces.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+from oracles import assert_bit_equal_to_oracle, env_interpret, random_cam_table
+
+import jax.numpy as jnp
+
+from repro.api import CompiledModel, build
+from repro.core.deploy import (
+    FAITHFUL_MODES,
+    MODES,
+    PACKABLE_MODES,
+    DeployConfig,
+)
+from repro.core.engine import XTimeEngine
+from repro.core.precision import (
+    CELL_MODES,
+    encode_soft_bounds,
+    get_cell_mode,
+    mode_names,
+    soft_cell_logscore,
+)
+from repro.core.quantize import FeatureQuantizer
+from repro.core.trees import GBDTParams, train_gbdt
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+# -- registry (the CellMode API) ----------------------------------------------
+
+
+def test_registry_names_and_derived_tuples():
+    assert set(mode_names()) == {
+        "direct", "inclusive", "msb_lsb", "two_cycle", "soft",
+    }
+    assert MODES == mode_names()
+    assert set(FAITHFUL_MODES) == {"msb_lsb", "two_cycle"}
+    assert set(PACKABLE_MODES) == {"direct", "inclusive"}
+    soft = get_cell_mode("soft")
+    assert soft.soft and not soft.packable and not soft.faithful
+    assert soft.table_dtype_policy == "float32"
+    for name in FAITHFUL_MODES:
+        assert CELL_MODES[name].table_dtype_policy == "int32"
+
+
+def test_unknown_mode_error_lists_registry():
+    with pytest.raises(ValueError, match="soft"):
+        get_cell_mode("fuzzy")
+    with pytest.raises(ValueError, match="two_cycle"):
+        DeployConfig(mode="fuzzy")
+
+
+def test_deploy_validation():
+    with pytest.raises(ValueError, match="float32"):
+        DeployConfig(mode="soft", table_dtype="uint8")
+    with pytest.raises(ValueError, match="soft"):
+        DeployConfig(mode="direct", table_dtype="float32")
+    with pytest.raises(ValueError, match="tau"):
+        DeployConfig(mode="soft", tau=-0.1)
+    with pytest.raises(ValueError, match="tau"):
+        DeployConfig(mode="soft", tau=float("inf"))
+    # tau=0 (the exact hard limit) is a valid temperature
+    DeployConfig(mode="soft", tau=0.0)
+
+
+# -- tau=0 bit-equality and the finite-tau oracle gate ------------------------
+
+
+def _queries(rng, table, b=64):
+    q = rng.integers(0, table.n_bins, size=(b, table.n_features))
+    q = q.astype(np.int32)
+    q[:4] = 0
+    q[4:8] = table.n_bins - 1  # dtype-boundary bins
+    return q
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_tau_zero_bit_equal_to_direct(backend):
+    rng = np.random.default_rng(0)
+    table = random_cam_table(rng, r=96, f=12, n_bins=256, n_outputs=3)
+    q = _queries(rng, table)
+    kw = dict(backend=backend, interpret=env_interpret())
+    hard = XTimeEngine.from_config(table, DeployConfig(mode="direct", **kw))
+    soft = XTimeEngine.from_config(
+        table, DeployConfig(mode="soft", tau=0.0, **kw)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(soft.raw_margin(q)), np.asarray(hard.raw_margin(q))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(soft.predict(q)), np.asarray(hard.predict(q))
+    )
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_oracle_harness_all_modes(mode):
+    """The CI cell-modes job's workload: every registered mode through
+    the shared differential-oracle gate on the pallas backend."""
+    rng = np.random.default_rng(1)
+    table = random_cam_table(rng, r=96, f=12, n_bins=256, n_outputs=2)
+    q = _queries(rng, table)
+    cfg = DeployConfig(
+        backend="pallas", mode=mode, interpret=env_interpret(),
+        tau=0.25 if mode == "soft" else 0.0,
+    )
+    assert_bit_equal_to_oracle(table, q, cfg)
+
+
+def test_soft_scores_finite_and_bounded():
+    """No NaN/positive log-score anywhere: wildcards are exactly 0,
+    never-match cells exactly -inf, everything else strictly between."""
+    rng = np.random.default_rng(2)
+    table = random_cam_table(rng, r=64, f=10, n_bins=256)
+    lo, hi = encode_soft_bounds(table.low, table.high, table.n_bins)
+    q = rng.integers(0, 256, size=(16, 10)).astype(np.float32)
+    for tau in (0.0, 0.1, 1.0):
+        logs = np.asarray(
+            soft_cell_logscore(
+                jnp.asarray(q)[:, None, :], jnp.asarray(lo)[None],
+                jnp.asarray(hi)[None], tau,
+            )
+        )
+        assert not np.isnan(logs).any()
+        assert (logs <= 0.0).all()
+    # wildcard cells score exactly 1 (log 0) at every temperature — the
+    # invariant that keeps tile skipping and column clustering valid
+    wild = (table.low <= 0) & (table.high >= table.n_bins)
+    assert wild.any()
+    logs = np.asarray(
+        soft_cell_logscore(
+            jnp.asarray(q)[:1, None, :], jnp.asarray(lo)[None],
+            jnp.asarray(hi)[None], 0.5,
+        )
+    )[0]
+    assert (logs[wild] == 0.0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    low=st.integers(min_value=0, max_value=250),
+    width=st.integers(min_value=1, max_value=255),
+    q=st.integers(min_value=0, max_value=255),
+)
+def test_soft_score_monotone_in_tau(low, width, q):
+    """Shrinking tau moves every cell score monotonically toward the
+    hard 0/1 indicator (for tau <= 0.5 bin units — the supported
+    smoothing regime), so tau is a true sharpness dial."""
+    high = min(low + width, 256)
+    lo, hi = encode_soft_bounds(
+        np.array([[low]]), np.array([[high]]), 256
+    )
+    hard = 1.0 if low <= q < high else 0.0
+    dists = []
+    for tau in (0.05, 0.1, 0.2, 0.35, 0.5):
+        s = float(
+            np.exp(
+                np.asarray(
+                    soft_cell_logscore(
+                        jnp.asarray([[float(q)]]), jnp.asarray(lo),
+                        jnp.asarray(hi), tau,
+                    )
+                )
+            )[0, 0]
+        )
+        dists.append(abs(s - hard))
+    assert all(b >= a - 1e-6 for a, b in zip(dists, dists[1:])), dists
+
+
+# -- uncertainty channel -------------------------------------------------------
+
+
+def _trained_model(task="binary", tau=0.25, n=400, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 6)).astype(np.float32)
+    if task == "binary":
+        y = (x[:, 0] + 0.5 * x[:, 1] + 0.3 * rng.normal(size=n) > 0)
+        y = y.astype(np.int32)
+        n_classes = 1
+    else:
+        y = ((x[:, 0] > 0).astype(np.int32) + (x[:, 1] > 0.5)).astype(np.int32)
+        n_classes = 3
+        task = "multiclass"
+    quant = FeatureQuantizer.fit(x, 256)
+    ens = train_gbdt(
+        quant.transform(x), y, task=task, n_bins=256, n_classes=n_classes,
+        params=GBDTParams(n_rounds=8, max_depth=3),
+    )
+    cm = build(ens, quantizer=quant, deploy=DeployConfig(mode="soft", tau=tau))
+    return cm, x, y
+
+
+def test_uncertainty_shape_and_tau_zero_semantics():
+    cm, x, _ = _trained_model()
+    eng = cm.engine()
+    q = cm.quantizer.transform(x)
+    u = np.asarray(eng.uncertainty(q))
+    assert u.shape == (x.shape[0], cm.table.n_outputs)
+    assert np.isfinite(u).all() and (u >= 0).all()
+    # tau=0: every weight is 0/1, the mass per channel is the tree count
+    # routed there, and the spread is the honest across-tree disagreement
+    eng0 = cm.engine(tau=0.0)
+    m = np.asarray(eng0.raw_moments(q))
+    C = cm.table.n_outputs
+    mass = m[:, 2 * C :]
+    assert np.allclose(mass.sum(axis=1), cm.table.n_trees)
+
+
+def test_hard_engines_raise_clear_errors():
+    cm, x, _ = _trained_model()
+    hard = cm.engine(mode="direct")
+    with pytest.raises(ValueError, match="soft"):
+        hard.uncertainty(cm.quantizer.transform(x))
+    with pytest.raises(ValueError, match="cell_mode='soft'"):
+        cm.predict_proba(x, mode="direct")
+    with pytest.raises(ValueError, match="cell_mode='soft'"):
+        cm.predict(x, return_uncertainty=True, mode="direct")
+
+
+def test_predict_proba_and_calibration_sanity():
+    cm, x, y = _trained_model()
+    p = cm.predict_proba(x)
+    assert p.shape == (x.shape[0], 2)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-5)
+    assert (p >= 0).all() and (p <= 1).all()
+    # calibration-bin sanity: confident predictions must be MORE accurate
+    # than unconfident ones (coarse two-bin check — monotone reliability)
+    conf = p.max(axis=1)
+    pred = p.argmax(axis=1)
+    order = np.argsort(conf)
+    half = len(order) // 2
+    acc_lo = float((pred[order[:half]] == y[order[:half]]).mean())
+    acc_hi = float((pred[order[half:]] == y[order[half:]]).mean())
+    assert acc_hi >= acc_lo - 1e-9, (acc_lo, acc_hi)
+
+
+def test_predict_uncertainty_and_proba_roundtrip(tmp_path):
+    cm, x, _ = _trained_model(task="multiclass")
+    p = cm.predict_proba(x)
+    pred, unc = cm.predict(x, return_uncertainty=True)
+    assert p.shape == (x.shape[0], 3) and unc.shape == (x.shape[0],)
+    cm.save(tmp_path / "soft")
+    loaded = CompiledModel.load(tmp_path / "soft")
+    assert loaded.deploy.mode == "soft"
+    assert loaded.deploy.tau == cm.deploy.tau  # sidecar records mode + tau
+    np.testing.assert_array_equal(loaded.predict_proba(x), p)
+    pred2, unc2 = loaded.predict(x, return_uncertainty=True)
+    np.testing.assert_array_equal(pred2, pred)
+    np.testing.assert_array_equal(unc2, unc)
+
+
+# -- autotune integration ------------------------------------------------------
+
+
+def test_autotune_respects_soft_pinning():
+    from repro.core.tune import autotune_kernel, kernel_version
+
+    assert kernel_version("float32") == "soft"
+    assert kernel_version("int32") == "v1"
+    assert kernel_version("uint8") == "v2"
+
+    rng = np.random.default_rng(3)
+    table = random_cam_table(rng, r=64, f=8, n_bins=256)
+    plan = autotune_kernel(
+        table, deploy=DeployConfig(mode="soft", tau=0.1), batch=32,
+        b_blks=(32,), r_blks=(32, 64), warmup=0, iters=1,
+    )
+    assert plan.mode == "soft"
+    assert plan.table_dtype == "float32"
+    assert plan.kernel == "soft"
+    assert all(t["mode"] == "soft" for t in plan.trials)
+
+
+# -- scale-out -----------------------------------------------------------------
+
+
+_SHARD_CODE = """
+import json
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from oracles import random_cam_table
+from repro.core.deploy import DeployConfig
+from repro.core.engine import XTimeEngine
+
+rng = np.random.default_rng(7)
+table = random_cam_table(rng, r=128, f=10, n_bins=256, n_outputs=2)
+q = rng.integers(0, 256, size=(64, 10)).astype(np.int32)
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("model", "data"))
+cfg = DeployConfig(mode="soft", tau=0.5, spmd="shard_map")
+m_mesh = np.asarray(
+    XTimeEngine.from_config(table, cfg, mesh=mesh).raw_margin(q)
+)
+m_one = np.asarray(
+    XTimeEngine.from_config(table, DeployConfig(mode="soft", tau=0.5))
+    .raw_margin(q)
+)
+cfg0 = DeployConfig(mode="soft", tau=0.0, spmd="shard_map")
+m0 = np.asarray(XTimeEngine.from_config(table, cfg0, mesh=mesh).raw_margin(q))
+mh = np.asarray(
+    XTimeEngine.from_config(
+        table, DeployConfig(mode="direct", spmd="shard_map"), mesh=mesh
+    ).raw_margin(q)
+)
+u_mesh = np.asarray(XTimeEngine.from_config(table, cfg, mesh=mesh).uncertainty(q))
+u_one = np.asarray(
+    XTimeEngine.from_config(table, DeployConfig(mode="soft", tau=0.5))
+    .uncertainty(q)
+)
+print(json.dumps({
+    "finite_tau_max_err": float(np.abs(m_mesh - m_one).max()),
+    "tau0_bit_equal_direct": bool(np.array_equal(m0, mh)),
+    "uncertainty_max_err": float(np.abs(u_mesh - u_one).max()),
+}))
+"""
+
+
+def test_soft_mode_under_shard_map():
+    """Soft margins + the moments pass ride the same NoC collectives:
+    on 8 fake devices the row-sharded psum must reproduce the
+    single-device result, and tau=0 stays bit-equal to 'direct'."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + str(Path(__file__).parent)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARD_CODE], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["tau0_bit_equal_direct"], res
+    assert res["finite_tau_max_err"] <= 1e-5, res
+    assert res["uncertainty_max_err"] <= 1e-5, res
